@@ -1,0 +1,66 @@
+"""Kernel micro-benchmarks: correctness (interpret) + CPU-reference timings.
+
+Wall-clock here times the jnp reference path (the Pallas kernels target TPU;
+interpret mode is a correctness tool, not a perf path). The derived column
+reports the ideal v5e kernel time from the roofline model for context.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import out_path
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.int8_matmul import ref as i8ref
+from repro.kernels.fused_calib_gate.ref import calib_gate_ref
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS_BF16, PEAK_FLOPS_INT8
+
+
+def _time(fn, *args, n=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n
+
+
+def run() -> dict:
+    rows = []
+
+    M, K, N = 1024, 4096, 4096
+    x = jax.random.normal(jax.random.PRNGKey(0), (M, K), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N), jnp.float32)
+    t = _time(jax.jit(i8ref.matmul_ref), x, w)
+    ideal = 2 * M * K * N / PEAK_FLOPS_INT8
+    rows.append({"kernel": "int8_matmul_ref", "shape": f"{M}x{K}x{N}",
+                 "us_per_call": round(t * 1e6, 1), "v5e_ideal_us": round(ideal * 1e6, 2)})
+
+    B, S, H, D = 2, 2048, 8, 64
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, S, H, D), jnp.bfloat16)
+    t = _time(jax.jit(lambda q: attention_ref(q, q, q, causal=True)), q)
+    flops = 4 * B * H * S * S * D / 2
+    rows.append({"kernel": "flash_attention_ref", "shape": f"b{B}s{S}h{H}d{D}",
+                 "us_per_call": round(t * 1e6, 1), "v5e_ideal_us": round(flops / PEAK_FLOPS_BF16 * 1e6, 2)})
+
+    Bv, V = 256, 102_400
+    lg = jax.random.normal(jax.random.PRNGKey(0), (Bv, V), jnp.float32)
+    t = _time(jax.jit(lambda l: calib_gate_ref(l, -6.0, 2.0, 0.7)), lg)
+    ideal = Bv * V * 4 / HBM_BW  # memory-bound single pass
+    rows.append({"kernel": "fused_calib_gate_ref", "shape": f"{Bv}x{V}",
+                 "us_per_call": round(t * 1e6, 1), "v5e_ideal_us": round(ideal * 1e6, 2)})
+
+    with open(out_path("kernels_micro.json"), "w") as f:
+        json.dump(rows, f, indent=2)
+    for r in rows:
+        print(f"bench_kernels/{r['kernel']},us_per_call={r['us_per_call']},derived=v5e_ideal_us:{r['v5e_ideal_us']}")
+    return {"rows": rows}
+
+
+if __name__ == "__main__":
+    run()

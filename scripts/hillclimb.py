@@ -1,0 +1,118 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf hillclimb runner (assignment §PERFORMANCE HILLCLIMBING).
+
+Measures one (arch, shape) cell under a sequence of named configurations
+(each = ParallelPlan/OptimConfig overrides), using the same diff-method
+cost extraction as dryrun. Writes results/perf/<cell>__<tag>.json.
+
+  PYTHONPATH=src python scripts/hillclimb.py arctic-480b train_4k \
+      baseline moe_grouped ...
+"""
+import dataclasses
+import json
+import sys
+import time
+
+import numpy as np
+
+# tag -> (plan_overrides, ocfg_overrides)
+CONFIGS = {
+    "baseline": ({}, {}),
+    "moe_grouped": ({"moe_grouped_dispatch": True}, {}),
+    "noclip": ({}, {"clip_norm": 0.0}),
+    "moe_grouped_noclip": ({"moe_grouped_dispatch": True}, {"clip_norm": 0.0}),
+    "fuse_qkv": ({"fuse_qkv": True}, {}),
+    "all_train": ({"moe_grouped_dispatch": True, "fuse_qkv": True}, {"clip_norm": 0.0}),
+    "kv_fold": ({"kv_scale_fold": True}, {}),
+    "pad_off": ({"pad_attention_heads": False}, {}),
+    "kv_fold_pad_off": ({"kv_scale_fold": True, "pad_attention_heads": False}, {}),
+    "mla_absorb": ({"mla_absorb": True}, {}),
+    "sp_attn": ({"attn_mode": "sp", "pad_attention_heads": False}, {}),
+    "chunk4k": ({"attn_chunk": 4096}, {}),
+    "fuse_qkv_chunk4k": ({"fuse_qkv": True, "attn_chunk": 4096}, {}),
+    "kv_bf16": ({"kv_cache_dtype": "bf16"}, {}),
+}
+
+
+def measure(arch_id, shape_name, plan_overrides, ocfg_overrides):
+    from repro.configs.base import get_arch
+    from repro.launch import roofline as rl
+    from repro.launch.cells import build_cell, lower_cell
+    from repro.launch.mesh import make_production_mesh
+
+    spec = get_arch(arch_id)
+    shape = spec.shapes[shape_name]
+    mesh = make_production_mesh()
+    full = spec.full
+    is_lm = spec.family in ("lm", "moe-lm")
+
+    if is_lm and shape.kind in ("train", "prefill"):
+        fkd = full.moe.first_k_dense if full.moe is not None else 0
+        La, Lb = fkd + 1, fkd + 2
+        costs, colls = [], []
+        for L in (La, Lb):
+            cell = build_cell(arch_id, shape_name, mesh, analysis=True,
+                              plan_overrides=plan_overrides or None,
+                              cfg_override=dataclasses.replace(full, n_layers=L),
+                              ocfg_overrides=ocfg_overrides or None)
+            lo, co = lower_cell(cell)
+            costs.append(rl.cost_summary(co))
+            colls.append(rl.parse_collectives(co.as_text()))
+            del lo, co
+        n_extra = full.n_layers - La
+        flops = costs[0]["flops"] + n_extra * (costs[1]["flops"] - costs[0]["flops"])
+        bytes_ = costs[0]["bytes"] + n_extra * (costs[1]["bytes"] - costs[0]["bytes"])
+        coll = {}
+        for k in set(colls[0]) | set(colls[1]):
+            d = colls[1].get(k, 0) - colls[0].get(k, 0)
+            coll[k] = colls[0].get(k, 0) + n_extra * d
+        mem = None
+    else:
+        cell = build_cell(arch_id, shape_name, mesh, analysis=True,
+                          plan_overrides=plan_overrides or None,
+                          ocfg_overrides=ocfg_overrides or None)
+        lo, co = lower_cell(cell)
+        cs = rl.cost_summary(co)
+        flops, bytes_ = cs["flops"], cs["bytes"]
+        coll = rl.parse_collectives(co.as_text())
+        mem = rl.memory_summary(co)
+        del lo, co
+    terms = rl.roofline_terms(flops, bytes_, float(sum(coll.values())))
+    return {
+        "flops": flops, "bytes": bytes_, "coll_bytes": float(sum(coll.values())),
+        "collectives": coll, "compute_s": terms.compute_s, "memory_s": terms.memory_s,
+        "collective_s": terms.collective_s, "dominant": terms.dominant,
+        "bound_s": terms.bound_s, "memory": mem,
+    }
+
+
+def main():
+    arch_id, shape_name = sys.argv[1], sys.argv[2]
+    tags = sys.argv[3:] or ["baseline"]
+    os.makedirs("results/perf", exist_ok=True)
+    for tag in tags:
+        po, oo = CONFIGS[tag]
+        out_path = f"results/perf/{arch_id}__{shape_name}__{tag}.json"
+        if os.path.exists(out_path):
+            print(f"[cached] {tag}")
+            continue
+        t0 = time.time()
+        try:
+            rec = measure(arch_id, shape_name, po, oo)
+            rec.update(tag=tag, arch=arch_id, shape=shape_name, wall_s=round(time.time() - t0, 1))
+        except Exception as e:
+            rec = {"tag": tag, "arch": arch_id, "shape": shape_name, "error": str(e)[:500]}
+        with open(out_path, "w") as f:
+            json.dump(rec, f, indent=2)
+        if "error" in rec:
+            print(f"[{tag}] ERROR {rec['error'][:150]}", flush=True)
+        else:
+            print(f"[{tag}] compute={rec['compute_s']:.3f}s memory={rec['memory_s']:.3f}s "
+                  f"collective={rec['collective_s']:.3f}s dominant={rec['dominant']} ({rec['wall_s']}s)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Build the §Dry-run / §Roofline tables for EXPERIMENTS.md from
+results/dryrun/*.json."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    return f"{x*1e3:.1f}ms"
+
+
+def fmt_b(x):
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("KB", 1e3)):
+        if x >= div:
+            return f"{x/div:.2f}{unit}"
+    return f"{x:.0f}B"
+
+
+def load(out_dir="results/dryrun"):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def main():
+    recs = load(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skip = [r for r in recs if r.get("status") == "skipped"]
+    err = [r for r in recs if r.get("status") == "error"]
+    print(f"<!-- {len(ok)} ok / {len(skip)} skipped / {len(err)} error -->\n")
+
+    # ---- §Dry-run table (both meshes) ----
+    print("### Dry-run status (all cells × both meshes)\n")
+    print("| arch | shape | mesh | status | peak HBM/chip | collectives (per-chip bytes/step) |")
+    print("|---|---|---|---|---|---|")
+    for r in recs:
+        mem = r.get("memory", {})
+        peak = fmt_b(mem["peak_estimate_bytes"]) if mem else "-"
+        colls = ", ".join(f"{k}:{fmt_b(v)}" for k, v in sorted(r.get("collectives", {}).items(), key=lambda kv: -kv[1])[:3]) or "-"
+        status = r["status"] + ("" if r["status"] != "skipped" else " (sub-quadratic-attn shape on full-attn arch)")
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {status} | {peak} | {colls} |")
+
+    # ---- §Roofline table (single-pod only) ----
+    print("\n### Roofline (single-pod 16x16, per chip per step)\n")
+    print("| arch | shape | compute | memory | collective | dominant | MODEL/HLO flops | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    singles = [r for r in ok if r["mesh"] == "single"]
+    for r in sorted(singles, key=lambda r: (r["arch"], r["shape"])):
+        print(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} | "
+            f"{fmt_s(r['collective_s'])} | **{r['dominant']}** | {r['useful_ratio']:.3f} | {r['roofline_fraction']:.4f} |"
+        )
+
+    # ---- hillclimb candidates ----
+    print("\n### Hillclimb candidate ranking\n")
+    worst_frac = sorted(singles, key=lambda r: r["roofline_fraction"])[:5]
+    coll_bound = sorted([r for r in singles if r["dominant"] == "collective"],
+                        key=lambda r: -(r["collective_s"] / max(r["compute_s"], 1e-12)))[:5]
+    print("worst roofline fraction:")
+    for r in worst_frac:
+        print(f"  {r['arch']}/{r['shape']}: frac={r['roofline_fraction']:.5f} dominant={r['dominant']}")
+    print("most collective-bound (coll/compute ratio):")
+    for r in coll_bound:
+        print(f"  {r['arch']}/{r['shape']}: coll/comp={r['collective_s']/max(r['compute_s'],1e-12):.1f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,181 @@
+"""Confidence-score calibration (paper §III-B) + ECE/MCE metrics.
+
+Implements the paper's two calibration families plus temperature scaling:
+
+  * Platt scaling        — parametric logistic  P(y=1|s) = sigmoid(-(A s + B))
+                           (paper Eq. form 1/(1+e^{A f(x)+B})), trained by
+                           Newton-Raphson on binary NLL in JAX.
+  * Isotonic regression  — non-parametric PAVA fit of a monotone step
+                           function, predicted via searchsorted.
+  * Temperature scaling  — single T on the logits (Guo et al. 2017), Newton.
+
+Metrics follow the paper exactly: 10 equal-width bins on [0,1],
+ECE = sum |B_i|/n * |acc(B_i) - conf(B_i)|, MCE = max_i |acc - conf|.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+F32 = jnp.float32
+
+
+# --------------------------------------------------------------------------- #
+# Metrics (paper's definitions, 10 bins of width 0.1)
+# --------------------------------------------------------------------------- #
+
+
+def reliability_bins(conf, correct, n_bins: int = 10):
+    """Returns (bin_count, bin_accuracy, bin_mean_conf) per bin."""
+    conf = np.asarray(conf, np.float64)
+    correct = np.asarray(correct, np.float64)
+    edges = np.linspace(0.0, 1.0, n_bins + 1)
+    idx = np.clip(np.digitize(conf, edges[1:-1]), 0, n_bins - 1)
+    count = np.zeros(n_bins)
+    acc = np.zeros(n_bins)
+    mc = np.zeros(n_bins)
+    for b in range(n_bins):
+        m = idx == b
+        count[b] = m.sum()
+        if count[b]:
+            acc[b] = correct[m].mean()
+            mc[b] = conf[m].mean()
+    return count, acc, mc
+
+
+def ece(conf, correct, n_bins: int = 10) -> float:
+    count, acc, mc = reliability_bins(conf, correct, n_bins)
+    n = count.sum()
+    return float(np.sum(count / max(n, 1) * np.abs(acc - mc)))
+
+
+def mce(conf, correct, n_bins: int = 10) -> float:
+    count, acc, mc = reliability_bins(conf, correct, n_bins)
+    gaps = np.abs(acc - mc)[count > 0]
+    return float(gaps.max()) if gaps.size else 0.0
+
+
+# --------------------------------------------------------------------------- #
+# Platt scaling
+# --------------------------------------------------------------------------- #
+
+
+@dataclass
+class PlattCalibrator:
+    a: float = -1.0
+    b: float = 0.0
+
+    def __call__(self, s):
+        return jax.nn.sigmoid(-(self.a * jnp.asarray(s, F32) + self.b))
+
+    @staticmethod
+    def fit(scores, correct, n_iter: int = 50) -> "PlattCalibrator":
+        s = jnp.asarray(scores, F32)
+        # Platt's target smoothing (avoids overconfident saturation)
+        n_pos = float(np.sum(np.asarray(correct) > 0.5))
+        n_neg = float(len(correct) - n_pos)
+        y = jnp.where(jnp.asarray(correct) > 0.5, (n_pos + 1) / (n_pos + 2), 1.0 / (n_neg + 2))
+
+        def nll(ab):
+            z = -(ab[0] * s + ab[1])
+            p = jax.nn.sigmoid(z)
+            return -jnp.mean(y * jnp.log(jnp.clip(p, 1e-12, 1)) + (1 - y) * jnp.log(jnp.clip(1 - p, 1e-12, 1)))
+
+        ab = jnp.array([-1.0, 0.0], F32)
+        g_fn = jax.jit(jax.grad(nll))
+        h_fn = jax.jit(jax.hessian(nll))
+        for _ in range(n_iter):
+            g, h = g_fn(ab), h_fn(ab)
+            h = h + 1e-6 * jnp.eye(2)
+            ab = ab - jnp.linalg.solve(h, g)
+        return PlattCalibrator(float(ab[0]), float(ab[1]))
+
+
+# --------------------------------------------------------------------------- #
+# Isotonic regression (PAVA)
+# --------------------------------------------------------------------------- #
+
+
+@dataclass
+class IsotonicCalibrator:
+    thresholds: np.ndarray = None  # sorted score knots
+    values: np.ndarray = None  # monotone fitted values
+
+    def __call__(self, s):
+        idx = jnp.clip(jnp.searchsorted(jnp.asarray(self.thresholds), jnp.asarray(s, F32), side="right") - 1, 0, len(self.values) - 1)
+        return jnp.asarray(self.values, F32)[idx]
+
+    @staticmethod
+    def fit(scores, correct) -> "IsotonicCalibrator":
+        s = np.asarray(scores, np.float64)
+        y = np.asarray(correct, np.float64)
+        order = np.argsort(s, kind="stable")
+        s, y = s[order], y[order]
+        # pool adjacent violators (stack-based, O(n))
+        vals: list[float] = []
+        wts: list[float] = []
+        starts: list[int] = []
+        for i, yi in enumerate(y):
+            vals.append(float(yi))
+            wts.append(1.0)
+            starts.append(i)
+            while len(vals) > 1 and vals[-2] >= vals[-1]:
+                v = (vals[-2] * wts[-2] + vals[-1] * wts[-1]) / (wts[-2] + wts[-1])
+                w = wts[-2] + wts[-1]
+                st = starts[-2]
+                vals = vals[:-2] + [v]
+                wts = wts[:-2] + [w]
+                starts = starts[:-2] + [st]
+        thresholds = np.array([s[st] for st in starts])
+        return IsotonicCalibrator(thresholds, np.asarray(vals))
+
+
+# --------------------------------------------------------------------------- #
+# Temperature scaling
+# --------------------------------------------------------------------------- #
+
+
+@dataclass
+class TemperatureCalibrator:
+    temperature: float = 1.0
+
+    def scale_logits(self, logits):
+        return logits / jnp.asarray(self.temperature, F32)
+
+    def __call__(self, logits):
+        """Calibrated max-softmax straight from logits."""
+        return jnp.max(jax.nn.softmax(logits.astype(F32) / self.temperature, axis=-1), axis=-1)
+
+    @staticmethod
+    def fit(logits, labels, n_iter: int = 50) -> "TemperatureCalibrator":
+        lg = jnp.asarray(logits, F32)
+        lb = jnp.asarray(labels)
+
+        def nll(log_t):
+            z = lg / jnp.exp(log_t)
+            lse = jax.nn.logsumexp(z, axis=-1)
+            gold = jnp.take_along_axis(z, lb[:, None], axis=-1)[:, 0]
+            return jnp.mean(lse - gold)
+
+        log_t = jnp.zeros(())
+        g_fn = jax.jit(jax.grad(nll))
+        h_fn = jax.jit(jax.hessian(nll))
+        for _ in range(n_iter):
+            g, h = g_fn(log_t), h_fn(log_t)
+            log_t = log_t - g / jnp.maximum(jnp.abs(h), 1e-6) * jnp.sign(h + 1e-12)
+        return TemperatureCalibrator(float(jnp.exp(log_t)))
+
+
+def fit_all(scores, correct, logits=None, labels=None) -> dict:
+    """Fit every calibrator; returns {name: calibrator} (paper Table I set)."""
+    out = {
+        "uncalibrated": lambda s: jnp.asarray(s, F32),
+        "platt": PlattCalibrator.fit(scores, correct),
+        "isotonic": IsotonicCalibrator.fit(scores, correct),
+    }
+    if logits is not None and labels is not None:
+        out["temperature"] = TemperatureCalibrator.fit(logits, labels)
+    return out

@@ -1,0 +1,106 @@
+"""The CBO data plane: jit-able two-tier cascade execution (DESIGN.md §2).
+
+Per batch of inputs:
+  1. fast tier (quantized "NPU" model) classifies everything;
+  2. confidence = calibrated max-softmax;
+  3. the K lowest-confidence inputs *below threshold* are gathered
+     (static capacity K — chosen by the CBO planner) and re-run on the
+     slow tier at the planned fidelity (resolution);
+  4. slow predictions are scattered back over the fast ones.
+
+Static shapes throughout: escalation uses `top_k` + gather with a validity
+mask, the same relaxation capacity-based MoE dispatch makes. Reduced
+resolution r is realised as downsample(r) -> upsample(native): exactly what
+an edge server does with a low-resolution upload, and it keeps one compiled
+slow-tier signature per batch shape.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.confidence import max_softmax
+
+F32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class CascadeOut:
+    preds: jnp.ndarray  # (B,) final predictions
+    fast_preds: jnp.ndarray  # (B,) fast-tier predictions
+    conf: jnp.ndarray  # (B,) calibrated confidence
+    escalated: jnp.ndarray  # (B,) bool — actually re-run on slow tier
+    esc_idx: jnp.ndarray  # (K,) gathered indices (padded)
+
+
+jax.tree_util.register_pytree_node(
+    CascadeOut,
+    lambda c: ((c.preds, c.fast_preds, c.conf, c.escalated, c.esc_idx), None),
+    lambda _, ch: CascadeOut(*ch),
+)
+
+
+def degrade_resolution(images, res: int):
+    """Simulate offloading at resolution ``res``: down- then up-sample."""
+    B, H, W, C = images.shape
+    if res >= H:
+        return images
+    small = jax.image.resize(images, (B, res, res, C), "bilinear")
+    return jax.image.resize(small, (B, H, W, C), "bilinear").astype(images.dtype)
+
+
+def cascade_classify(
+    fast_forward: Callable,
+    slow_forward: Callable,
+    calibrate: Callable,
+    images,
+    *,
+    threshold,
+    capacity: int,
+    resolution: int,
+):
+    """Run the two-tier cascade on one batch of images.
+
+    ``threshold`` may be a python float or a traced scalar (adaptive theta).
+    ``capacity`` and ``resolution`` are static (from the CBO plan).
+    """
+    B = images.shape[0]
+    K = min(capacity, B)
+    fast_logits = fast_forward(images)
+    conf = calibrate(max_softmax(fast_logits)).astype(F32)
+    fast_preds = jnp.argmax(fast_logits, axis=-1)
+
+    gate = conf < threshold
+    score = jnp.where(gate, -conf, -jnp.inf)  # lowest confidence first
+    _, esc_idx = jax.lax.top_k(score, K)
+    valid = jnp.take(gate, esc_idx)
+
+    esc_imgs = degrade_resolution(jnp.take(images, esc_idx, axis=0), resolution)
+    slow_logits = slow_forward(esc_imgs)
+    slow_preds = jnp.argmax(slow_logits, axis=-1)
+
+    merged = fast_preds.at[esc_idx].set(jnp.where(valid, slow_preds, jnp.take(fast_preds, esc_idx)))
+    escalated = jnp.zeros((B,), bool).at[esc_idx].set(valid)
+    return CascadeOut(merged, fast_preds, conf, escalated, esc_idx)
+
+
+def make_cascade_fn(fast_forward, slow_forward, calibrate, *, capacity: int, resolution: int):
+    """jit-compiled cascade with traced threshold (re-plan without recompile)."""
+
+    @partial(jax.jit, static_argnames=())
+    def fn(images, threshold):
+        return cascade_classify(
+            fast_forward,
+            slow_forward,
+            calibrate,
+            images,
+            threshold=threshold,
+            capacity=capacity,
+            resolution=resolution,
+        )
+
+    return fn

@@ -1,0 +1,45 @@
+"""Confidence scores from classifier outputs (paper §III-A).
+
+The paper's score is max-softmax over the (unnormalized) feature vector.
+We also provide margin and entropy scores (used in ablations).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def max_softmax(logits) -> jnp.ndarray:
+    """The paper's confidence score: max_i sigma(x_i). logits: (..., N)."""
+    return jnp.max(jax.nn.softmax(logits.astype(F32), axis=-1), axis=-1)
+
+
+def margin(logits) -> jnp.ndarray:
+    """Top-1 minus top-2 softmax probability."""
+    p = jax.nn.softmax(logits.astype(F32), axis=-1)
+    top2 = jax.lax.top_k(p, 2)[0]
+    return top2[..., 0] - top2[..., 1]
+
+
+def neg_entropy(logits) -> jnp.ndarray:
+    """Normalized negative entropy in [0, 1] (1 = fully confident)."""
+    p = jax.nn.softmax(logits.astype(F32), axis=-1)
+    h = -jnp.sum(p * jnp.log(jnp.clip(p, 1e-12, 1.0)), axis=-1)
+    return 1.0 - h / jnp.log(p.shape[-1])
+
+
+def sequence_confidence(token_logits, mask=None) -> jnp.ndarray:
+    """LM adaptation: mean per-token max-softmax over a sequence.
+
+    token_logits: (B, S, V); mask: (B, S) optional validity mask.
+    """
+    c = max_softmax(token_logits)  # (B, S)
+    if mask is None:
+        return c.mean(-1)
+    m = mask.astype(F32)
+    return (c * m).sum(-1) / jnp.maximum(m.sum(-1), 1.0)
+
+
+SCORES = {"max_softmax": max_softmax, "margin": margin, "neg_entropy": neg_entropy}

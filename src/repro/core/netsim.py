@@ -1,0 +1,60 @@
+"""Network simulator for the paper's testbed regime (benchmarks §V).
+
+Serial uplink with (possibly time-varying) bandwidth, fixed latency, and a
+server processing time. Deterministic given a seed. Bandwidths are in
+megabits/s at the API surface (as in the paper's figures); bytes internally.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+def mbps(x: float) -> float:
+    """Megabits/s -> bytes/s."""
+    return x * 1e6 / 8.0
+
+
+@dataclass
+class Uplink:
+    bandwidth_bps: float  # bytes per second
+    latency: float  # seconds (one-way + reply, lumped as L in the paper)
+    server_time: float  # T^o
+    jitter: float = 0.0  # relative bandwidth jitter (OU-ish random walk)
+    seed: int = 0
+    _busy_until: float = 0.0
+    _rng: np.random.Generator = field(default=None, repr=False)
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+
+    def current_bandwidth(self, t: float) -> float:
+        if self.jitter <= 0:
+            return self.bandwidth_bps
+        # deterministic pseudo-random walk indexed by the integer second
+        step = int(t)
+        g = np.random.default_rng(self.seed + step)
+        factor = float(np.clip(1.0 + self.jitter * g.standard_normal(), 0.2, 2.0))
+        return self.bandwidth_bps * factor
+
+    def transmit(self, payload_bytes: float, t_submit: float) -> float:
+        """Queue a transfer; returns the time the *reply* lands."""
+        bw = self.current_bandwidth(max(t_submit, self._busy_until))
+        start = max(t_submit, self._busy_until)
+        end_tx = start + payload_bytes / bw
+        self._busy_until = end_tx
+        return end_tx + self.server_time + self.latency
+
+    def would_land_at(self, payload_bytes: float, t_submit: float) -> float:
+        bw = self.current_bandwidth(max(t_submit, self._busy_until))
+        start = max(t_submit, self._busy_until)
+        return start + payload_bytes / bw + self.server_time + self.latency
+
+    def reset(self):
+        self._busy_until = 0.0
+
+
+def png_size_model(res: int, *, base_res: int = 224, base_bytes: float = 60_000.0) -> float:
+    """Approximate lossless-PNG payload size vs resolution (scales ~ r²)."""
+    return base_bytes * (res / base_res) ** 2

@@ -1,0 +1,58 @@
+"""Adaptive CBO controller (paper §IV-D deployment loop).
+
+Maintains the backlog of locally-classified frames, estimates bandwidth with
+an EWMA over observed transfers, and re-runs Algorithm 1 to refresh
+(theta, resolution, capacity) — the knobs the data plane consumes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.cbo import Env, Frame, Plan, cbo_plan
+
+
+@dataclass
+class BandwidthEstimator:
+    alpha: float = 0.3
+    estimate_bps: float = 1e6
+
+    def observe(self, payload_bytes: float, seconds: float):
+        if seconds > 1e-9:
+            self.estimate_bps = (1 - self.alpha) * self.estimate_bps + self.alpha * (payload_bytes / seconds)
+
+
+@dataclass
+class AdaptiveController:
+    resolutions: tuple[int, ...]
+    acc_server: tuple[float, ...]  # A^o_r, measured offline (paper Fig. 10)
+    deadline: float
+    latency: float
+    server_time: float
+    size_of: callable  # res -> payload bytes
+    bw: BandwidthEstimator = field(default_factory=BandwidthEstimator)
+    backlog: list = field(default_factory=list)
+    max_backlog: int = 64
+
+    def add_frame(self, arrival: float, conf: float):
+        self.backlog.append(Frame(arrival, float(conf), tuple(self.size_of(r) for r in self.resolutions)))
+        if len(self.backlog) > self.max_backlog:
+            self.backlog = self.backlog[-self.max_backlog :]
+
+    def plan(self, now: float) -> Plan:
+        env = Env(
+            bandwidth=self.bw.estimate_bps,
+            latency=self.latency,
+            server_time=self.server_time,
+            deadline=self.deadline,
+            acc_server=self.acc_server,
+        )
+        # drop frames whose window already expired
+        self.backlog = [f for f in self.backlog if f.arrival + self.deadline > now]
+        return cbo_plan(self.backlog, env, now=now)
+
+    def consume(self, frame_indices):
+        """Remove frames that were actually offloaded."""
+        drop = set(frame_indices)
+        self.backlog = [f for i, f in enumerate(self.backlog) if i not in drop]

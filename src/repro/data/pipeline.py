@@ -1,0 +1,88 @@
+"""Deterministic sharded data pipeline.
+
+Each step's batch is a pure function of (seed, step): any host can
+reconstruct any shard of any step — which is what makes checkpoint/restart
+and elastic re-sharding trivial (no reader state to save beyond the step).
+Background prefetch thread keeps the accelerator fed.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Callable, Iterator, Optional
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class PipelineConfig:
+    global_batch: int
+    seed: int = 0
+    prefetch: int = 2
+
+
+class DeterministicPipeline:
+    """batch_fn(rng, indices) -> batch dict; indices are per-step unique."""
+
+    def __init__(self, cfg: PipelineConfig, batch_fn: Callable, dataset_size: int,
+                 shard_index: int = 0, shard_count: int = 1):
+        self.cfg = cfg
+        self.batch_fn = batch_fn
+        self.dataset_size = dataset_size
+        self.shard_index = shard_index
+        self.shard_count = shard_count
+        assert cfg.global_batch % shard_count == 0
+        self.local_batch = cfg.global_batch // shard_count
+
+    def batch_at(self, step: int) -> dict:
+        rng = np.random.default_rng((self.cfg.seed, step))
+        idx = rng.integers(0, self.dataset_size, size=self.cfg.global_batch)
+        local = idx[self.shard_index * self.local_batch : (self.shard_index + 1) * self.local_batch]
+        return self.batch_fn(np.random.default_rng((self.cfg.seed, step, self.shard_index)), local)
+
+    def __iter__(self) -> Iterator[dict]:
+        return self.iterate(0)
+
+    def iterate(self, start_step: int) -> Iterator[dict]:
+        q: queue.Queue = queue.Queue(maxsize=self.cfg.prefetch)
+        stop = threading.Event()
+
+        def worker():
+            s = start_step
+            while not stop.is_set():
+                q.put(self.batch_at(s))
+                s += 1
+
+        t = threading.Thread(target=worker, daemon=True)
+        t.start()
+        try:
+            while True:
+                yield q.get()
+        finally:
+            stop.set()
+
+
+def token_batch_fn(vocab_size: int, seq_len: int, *, order: int = 2):
+    """Synthetic-language batches: a seeded bigram chain over a zipf vocab —
+    learnable structure so training losses actually move."""
+
+    def fn(rng: np.random.Generator, idx: np.ndarray) -> dict:
+        B = len(idx)
+        # per-index deterministic stream
+        toks = np.empty((B, seq_len + 1), np.int32)
+        for i, ix in enumerate(idx):
+            r = np.random.default_rng(int(ix))
+            base = r.zipf(1.5, size=seq_len + 1).astype(np.int64)
+            mix = (base * 2654435761 + np.arange(seq_len + 1) * int(ix + 1)) % vocab_size
+            toks[i] = mix.astype(np.int32)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+    return fn
+
+
+def image_batch_fn(dataset: dict):
+    def fn(rng: np.random.Generator, idx: np.ndarray) -> dict:
+        return {"images": dataset["frames"][idx], "labels": dataset["labels"][idx]}
+
+    return fn

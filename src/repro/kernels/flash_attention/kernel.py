@@ -1,0 +1,93 @@
+"""Pallas TPU flash attention (prefill hot-spot).
+
+Grid (B·H, Sq/bq, Sk/bk); the KV dimension is innermost/"arbitrary" and
+carries the online-softmax state (m, l, acc) in VMEM scratch. Causal
+blocks beyond the diagonal are skipped via @pl.when (the block-sparsity
+that makes flash ~2× on causal prefill). Block sizes are MXU-aligned
+(bq, bk multiples of 128; head dim padded by caller if needed).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, scale, causal, bq, bk, k_steps):
+    iq, ik = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    if causal:  # skip blocks fully above the diagonal (flash block-sparsity)
+        run = ik * bk <= iq * bq + bq - 1
+    else:
+        run = pl.program_id(2) >= 0  # always true (traced)
+
+    @pl.when(run)
+    def _block():
+        q = q_ref[0].astype(F32)  # (bq, d)
+        k = k_ref[0].astype(F32)  # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())), preferred_element_type=F32) * scale
+        if causal:
+            qpos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v_ref[0].astype(F32), (((1,), (0,)), ((), ())), preferred_element_type=F32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ik == k_steps - 1)
+    def _done():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 256, bk: int = 512, interpret: bool = False):
+    """q,k,v: (B, S, H, D) -> (B, S, H, D)."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    bq, bk = min(bq, Sq), min(bk, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0
+    scale = 1.0 / math.sqrt(D)
+    k_steps = Sk // bk
+
+    # (B,S,H,D) -> (B*H, S, D)
+    qt = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * H, Sk, D)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * H, Sk, D)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, bq=bq, bk=bk, k_steps=k_steps),
+        grid=(B * H, Sq // bq, k_steps),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), F32),
+            pltpu.VMEM((bq, 1), F32),
+            pltpu.VMEM((bq, D), F32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)

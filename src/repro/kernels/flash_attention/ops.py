@@ -1,0 +1,14 @@
+"""Dispatch wrapper: TPU -> Pallas flash kernel; elsewhere -> blockwise jnp
+(the same oracle the model layer uses), so model code is backend-agnostic."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention as _kernel
+from repro.models.layers import attention_blockwise
+
+
+def attention(q, k, v, *, causal: bool = True, use_kernel: str = "auto", **block_kw):
+    if use_kernel == "pallas" or (use_kernel == "auto" and jax.default_backend() == "tpu"):
+        return _kernel(q, k, v, causal=causal, interpret=jax.default_backend() != "tpu", **block_kw)
+    return attention_blockwise(q, k, v, causal=causal, chunk=1024)

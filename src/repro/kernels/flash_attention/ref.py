@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for causal flash attention (f32 softmax)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """q,k,v: (B, S, H, D) -> (B, S, H, D). Full materialized reference."""
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(F32), k.astype(F32)) * scale
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(F32)).astype(q.dtype)

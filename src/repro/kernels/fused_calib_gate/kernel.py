@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: fused softmax-max -> Platt -> threshold gate.
+
+One pass over the vocab axis (102k-152k wide for the assigned LMs): running
+(max, rescaled expsum) in VMEM scratch — max-softmax probability is
+1/expsum once the row max has been absorbed, so the full softmax vector is
+never materialized or written to HBM. Epilogue applies the Platt transform
+and the threshold compare. Saves a (B,V) f32 round trip vs the naive path.
+
+Grid (B/bb, V/bv), vocab innermost.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG = -1e30
+
+
+def _kernel(logits_ref, ab_ref, conf_ref, gate_ref, m_ref, s_ref, *, v_steps):
+    jv = pl.program_id(1)
+
+    @pl.when(jv == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    x = logits_ref[...].astype(F32)  # (bb, bv)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, x.max(-1, keepdims=True))
+    s_ref[...] = s_ref[...] * jnp.exp(m_prev - m_new) + jnp.exp(x - m_new).sum(-1, keepdims=True)
+    m_ref[...] = m_new
+
+    @pl.when(jv == v_steps - 1)
+    def _done():
+        conf = 1.0 / jnp.maximum(s_ref[...], 1e-30)  # = exp(m-m)/Z = max prob
+        a, b, theta = ab_ref[0, 0], ab_ref[0, 1], ab_ref[0, 2]
+        calib = jax.nn.sigmoid(-(a * conf + b))
+        conf_ref[...] = calib.astype(conf_ref.dtype)
+        gate_ref[...] = (calib < theta).astype(gate_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bb", "bv", "interpret"))
+def calib_gate(logits, a, b, theta, *, bb: int = 128, bv: int = 2048, interpret: bool = False):
+    """logits (B, V) -> (calibrated conf (B,1) f32, gate (B,1) int8)."""
+    B, V = logits.shape
+    bb, bv = min(bb, B), min(bv, V)
+    assert B % bb == 0 and V % bv == 0
+    v_steps = V // bv
+    ab = jnp.stack([jnp.asarray(a, F32), jnp.asarray(b, F32), jnp.asarray(theta, F32)]).reshape(1, 3)
+
+    conf, gate = pl.pallas_call(
+        functools.partial(_kernel, v_steps=v_steps),
+        grid=(B // bb, v_steps),
+        in_specs=[
+            pl.BlockSpec((bb, bv), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 3), lambda i, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 1), F32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int8),
+        ],
+        scratch_shapes=[pltpu.VMEM((bb, 1), F32), pltpu.VMEM((bb, 1), F32)],
+        interpret=interpret,
+    )(logits, ab)
+    return conf[:, 0], gate[:, 0].astype(bool)

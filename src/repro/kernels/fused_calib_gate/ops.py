@@ -1,0 +1,14 @@
+"""Dispatch wrapper for the fused calibrate+gate op."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.fused_calib_gate.kernel import calib_gate as _kernel
+from repro.kernels.fused_calib_gate.ref import calib_gate_ref
+
+
+def calibrated_gate(logits, a: float, b: float, theta: float, *, use_kernel: str = "auto"):
+    """(B,V) logits -> (calibrated confidence (B,), offload gate (B,))."""
+    if use_kernel == "pallas" or (use_kernel == "auto" and jax.default_backend() == "tpu"):
+        return _kernel(logits, a, b, theta, interpret=jax.default_backend() != "tpu")
+    return calib_gate_ref(logits, a, b, theta)

@@ -1,0 +1,19 @@
+"""Oracle for the fused confidence+calibration+gate op.
+
+conf  = max softmax(logits)            (paper's confidence score)
+calib = sigmoid(-(A*conf + B))         (Platt)
+gate  = calib < theta                  (offload decision)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def calib_gate_ref(logits, a, b, theta):
+    """logits (B, V) -> (calibrated_conf (B,), gate (B,) bool)."""
+    conf = jnp.max(jax.nn.softmax(logits.astype(F32), axis=-1), axis=-1)
+    calib = jax.nn.sigmoid(-(a * conf + b))
+    return calib, calib < theta

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: flash-decode over an int8 KV cache, scales folded.
+
+The qwen decode_32k hot-spot (EXPERIMENTS.md §Perf B): per step each chip
+streams its 10.7 GB int8 KV shard once. The kernel reads int8 blocks
+straight into VMEM, multiplies per-token scales into the scores/probs
+(never materializing a floating-point cache copy), and carries the online
+softmax over sequence blocks — the split-K structure matching the
+sequence-sharded cache layout.
+
+Grid (B, KH, S/bs); sequence innermost with (m, l, acc) VMEM carries.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+NEG = -1e30
+
+
+def _kernel(q_ref, kq_ref, ks_ref, vq_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref, *, scale, s_steps):
+    js = pl.program_id(2)
+
+    @pl.when(js == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(F32)  # (G, D)
+    k = kq_ref[0].astype(F32)  # (bs, D) int8 -> f32 in VMEM only
+    ks = ks_ref[0].astype(F32)  # (bs, 1)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())), preferred_element_type=F32)
+    s = s * ks[:, 0][None, :] * scale  # fold per-token K scale, (G, bs)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(-1, keepdims=True)
+    vs = vs_ref[0].astype(F32)  # (bs, 1)
+    pf = p * vs[:, 0][None, :]  # fold per-token V scale
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        pf, vq_ref[0].astype(F32), (((1,), (0,)), ((), ())), preferred_element_type=F32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(js == s_steps - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret"))
+def int8_kv_decode(q, k_q, k_s, v_q, v_s, *, bs: int = 512, interpret: bool = False):
+    """q (B,H,D); k_q/v_q (B,S,KH,D) int8; k_s/v_s (B,S) f32 -> (B,H,D)."""
+    B, H, D = q.shape
+    S, KH = k_q.shape[1], k_q.shape[2]
+    G = H // KH
+    bs = min(bs, S)
+    assert S % bs == 0
+    scale = 1.0 / math.sqrt(D)
+    s_steps = S // bs
+
+    qg = q.reshape(B, KH, G, D)
+    # (B,S,KH,D) -> (B*KH, S, D)
+    kt = k_q.transpose(0, 2, 1, 3).reshape(B * KH, S, D)
+    vt = v_q.transpose(0, 2, 1, 3).reshape(B * KH, S, D)
+    ks = jnp.repeat(k_s[:, None, :], KH, axis=1).reshape(B * KH, S, 1)
+    vs = jnp.repeat(v_s[:, None, :], KH, axis=1).reshape(B * KH, S, 1)
+    qx = qg.reshape(B * KH, 1, G, D)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, s_steps=s_steps),
+        grid=(B, KH, s_steps),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, k, s: (b * KH + k, 0, 0, 0)),
+            pl.BlockSpec((1, bs, D), lambda b, k, s: (b * KH + k, s, 0)),
+            pl.BlockSpec((1, bs, 1), lambda b, k, s: (b * KH + k, s, 0)),
+            pl.BlockSpec((1, bs, D), lambda b, k, s: (b * KH + k, s, 0)),
+            pl.BlockSpec((1, bs, 1), lambda b, k, s: (b * KH + k, s, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), lambda b, k, s: (b * KH + k, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KH, 1, G, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), F32),
+            pltpu.VMEM((G, 1), F32),
+            pltpu.VMEM((G, D), F32),
+        ],
+        interpret=interpret,
+    )(qx, kt, ks, vt, vs)
+    return out.reshape(B, KH, G, D).reshape(B, H, D)

@@ -1,0 +1,13 @@
+"""Dispatch wrapper for int8-KV decode attention."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.int8_kv_decode.kernel import int8_kv_decode as _kernel
+from repro.kernels.int8_kv_decode.ref import decode_attention_ref
+
+
+def decode_attention(q, k_q, k_s, v_q, v_s, *, use_kernel: str = "auto", **kw):
+    if use_kernel == "pallas" or (use_kernel == "auto" and jax.default_backend() == "tpu"):
+        return _kernel(q, k_q, k_s, v_q, v_s, interpret=jax.default_backend() != "tpu", **kw)
+    return decode_attention_ref(q, k_q, k_s, v_q, v_s)

@@ -1,0 +1,28 @@
+"""Oracle for int8-KV decode attention with per-token scale folding.
+
+q: (B, H, D) bf16/f32 — one new token per sequence.
+k_q/v_q: (B, S, KH, D) int8 ring caches; k_s/v_s: (B, S) f32 per-token scales.
+GQA: H = KH * G. Scales fold into scores / probs — the cache is never
+dequantized to a floating-point copy.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def decode_attention_ref(q, k_q, k_s, v_q, v_s):
+    B, H, D = q.shape
+    KH = k_q.shape[2]
+    G = H // KH
+    qg = q.reshape(B, KH, G, D).astype(F32)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k_q.astype(F32))
+    scores = scores * k_s[:, None, None, :] / math.sqrt(D)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs_f = probs * v_s[:, None, None, :]
+    out = jnp.einsum("bkgs,bskd->bkgd", probs_f, v_q.astype(F32))
+    return out.reshape(B, H, D).astype(q.dtype)

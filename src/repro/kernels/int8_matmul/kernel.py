@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: W8A8 int8 matmul with per-row/per-col dequant epilogue.
+
+The fast-tier ("NPU") compute hot-spot: int8 × int8 -> int32 on the MXU
+(2× bf16 throughput on v5e), fused dequantization on the final K step.
+
+Grid (M/bm, N/bn, K/bk); K is the innermost ("arbitrary") dimension and
+accumulates into an int32 VMEM scratch tile. Block sizes default to
+MXU-aligned 256×256×512.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+F32 = jnp.float32
+
+
+def _kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_ref, *, k_steps: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...],
+        w_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _done():
+        scaled = acc_ref[...].astype(F32) * xs_ref[...].astype(F32) * ws_ref[...].astype(F32)
+        o_ref[...] = scaled.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "out_dtype", "interpret"))
+def int8_matmul(x_q, x_scale, w_q, w_scale, *, bm=256, bn=256, bk=512,
+                out_dtype=jnp.float32, interpret=False):
+    """x_q (M,K) int8, x_scale (M,1) f32, w_q (K,N) int8, w_scale (1,N) f32."""
+    M, K = x_q.shape
+    K2, N = w_q.shape
+    assert K == K2, (x_q.shape, w_q.shape)
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
+    k_steps = K // bk
+
+    return pl.pallas_call(
+        functools.partial(_kernel, k_steps=k_steps),
+        grid=(M // bm, N // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x_q, w_q, x_scale, w_scale)

@@ -1,0 +1,39 @@
+"""jit'd dispatch wrapper for the int8 matmul: TPU -> Pallas kernel,
+CPU -> interpret (tests) or jnp reference (fast path for benchmarks)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.int8_matmul import ref
+from repro.kernels.int8_matmul.kernel import int8_matmul as _kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def quantized_matmul(x, w, *, out_dtype=jnp.float32, use_kernel: str = "auto", **block_kw):
+    """fp inputs -> quantize -> int8 GEMM -> dequant.
+
+    use_kernel: "auto" (pallas on TPU, ref elsewhere) | "pallas" (interpret
+    off-TPU; tests) | "ref".
+    """
+    xq, xs = ref.quantize_rows(x)
+    wq, ws = ref.quantize_cols(w)
+    if use_kernel == "ref" or (use_kernel == "auto" and not _on_tpu()):
+        return ref.int8_matmul_ref(xq, xs, wq, ws, out_dtype)
+    return _kernel(xq, xs, wq, ws, out_dtype=out_dtype, interpret=not _on_tpu(), **block_kw)
+
+
+def quantized_dense_apply(qtensor, x, *, out_dtype=jnp.bfloat16, use_kernel: str = "auto"):
+    """Apply a pre-quantized weight (quant.QTensor, per-out-channel scale) to
+    activations: the serving fast-tier linear layer."""
+    xq, xs = ref.quantize_rows(x.reshape(-1, x.shape[-1]))
+    w_q = qtensor.values
+    w_scale = qtensor.scale.reshape(1, -1) if qtensor.scale.ndim <= 2 else qtensor.scale
+    if use_kernel == "ref" or (use_kernel == "auto" and not _on_tpu()):
+        out = ref.int8_matmul_ref(xq, xs, w_q, w_scale, out_dtype)
+    else:
+        out = _kernel(xq, xs, w_q, w_scale, out_dtype=out_dtype, interpret=not _on_tpu())
+    return out.reshape(x.shape[:-1] + (w_q.shape[-1],))

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the W8A8 int8 matmul (per-row/per-col scales)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def quantize_rows(x):
+    """Per-row symmetric int8: returns (q (M,K) int8, scale (M,1) f32)."""
+    amax = jnp.max(jnp.abs(x.astype(F32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(F32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def quantize_cols(w):
+    """Per-column symmetric int8: returns (q (K,N) int8, scale (1,N) f32)."""
+    amax = jnp.max(jnp.abs(w.astype(F32)), axis=0, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(w.astype(F32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_matmul_ref(x_q, x_scale, w_q, w_scale, out_dtype=jnp.float32):
+    """(M,K)i8 × (K,N)i8 -> (M,N) with int32 accumulation, then dequant."""
+    acc = jnp.dot(x_q.astype(jnp.int32), w_q.astype(jnp.int32), preferred_element_type=jnp.int32)
+    return (acc.astype(F32) * x_scale.astype(F32) * w_scale.astype(F32)).astype(out_dtype)
+
+
+def matmul_ref(x, w, out_dtype=jnp.float32):
+    """End-to-end QDQ oracle: quantize fp inputs, int8 matmul, dequant."""
+    xq, xs = quantize_rows(x)
+    wq, ws = quantize_cols(w)
+    return int8_matmul_ref(xq, xs, wq, ws, out_dtype)

@@ -1,0 +1,335 @@
+"""Per-(arch × shape × mesh) cell construction: plans, rules, step functions,
+input specs and shardings. Shared by dryrun / train / serve launchers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import (
+    ArchSpec,
+    DiTConfig,
+    LMConfig,
+    ResNetConfig,
+    ShapeSpec,
+    SwinConfig,
+    UNetConfig,
+    ViTConfig,
+    get_arch,
+)
+from repro.models import api
+from repro.models import transformer as tr
+from repro.models.transformer import ParallelPlan
+from repro.sharding import axes as ax
+from repro.sharding.fsdp import tree_fsdp
+from repro.train import optim
+
+F32 = jnp.float32
+
+
+# --------------------------------------------------------------------------- #
+# Plans / rules / optimizer policy per cell
+# --------------------------------------------------------------------------- #
+
+
+def make_plan(cfg, shape: ShapeSpec, mesh, *, analysis: bool = False, overrides: dict | None = None) -> ParallelPlan:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_axis = sizes.get("model", 1)
+    data_axis = sizes.get("data", 1) * sizes.get("pod", 1)
+    kw: dict = dict(model_axis=model_axis, data_axis=data_axis, analysis_unroll=analysis)
+    if isinstance(cfg, LMConfig):
+        kw["attn_mode"] = "tp"  # padded-head TP baseline (DESIGN.md §5)
+        if shape.kind == "train" and shape.seq_len >= 4096:
+            kw["attn_chunk"] = 1024  # caps f32 score temps under remat
+        elif shape.kind == "prefill" and shape.seq_len >= 8192:
+            kw["attn_chunk"] = 2048
+        if shape.kind == "decode" and cfg.n_kv_heads == cfg.n_heads and shape.seq_len >= 32768:
+            kw["kv_cache_dtype"] = "int8"  # MHA KV does not fit in bf16 (qwen)
+        kw["remat"] = shape.kind == "train"
+        # optimized defaults adopted from the §Perf hillclimb (EXPERIMENTS.md);
+        # pass explicit overrides to reproduce the paper-faithful baselines.
+        if cfg.moe is not None and shape.kind in ("train", "prefill"):
+            kw["moe_grouped_dispatch"] = True  # gather-only grouped dispatch: 3.8x
+        if shape.kind == "decode":
+            kw["pad_attention_heads"] = False  # decode never head-shards: -25% KV bytes
+            if cfg.use_mla:
+                kw["mla_absorb"] = True  # latent-space MLA decode: -46% bytes
+        if cfg.n_kv_heads == cfg.n_heads and shape.kind in ("train", "prefill"):
+            kw["fuse_qkv"] = True  # single stacked QKV projection
+    if overrides:
+        kw.update(overrides)
+    return ParallelPlan(**kw)
+
+
+def make_rules(cfg, shape: ShapeSpec, mesh) -> dict:
+    axes_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    multi = "pod" in axes_sizes
+    rules = dict(ax.multipod_rules() if multi else ax.DEFAULT_RULES)
+    data_total = axes_sizes.get("data", 1) * axes_sizes.get("pod", 1)
+    batch = shape.global_batch or shape.batch
+    if batch and batch % data_total != 0:
+        # tiny-batch serving cells: replicate batch; use data axis spatially
+        rules["batch"] = None
+        rules["spatial"] = ("pod", "data") if multi else "data"
+        rules["seq_sp"] = (("pod", "data", "model") if multi else ("data", "model"))
+    if isinstance(cfg, LMConfig) and shape.kind == "train":
+        rules["seq_res"] = "model"  # Megatron-SP residual stream sharding
+    return rules
+
+
+def optim_policy(cfg) -> optim.OptimConfig:
+    n = api.build(cfg).n_params()
+    if n > 100e9:  # arctic: bf16 moments or it does not fit (DESIGN.md §5)
+        return optim.OptimConfig(m_dtype="bfloat16", v_dtype="bfloat16")
+    return optim.OptimConfig()
+
+
+def param_dtype_policy(cfg, shape: ShapeSpec):
+    """Training stores fp32 masters unless the model is huge; serving bf16."""
+    if shape.kind != "train":
+        return jnp.bfloat16
+    n = api.build(cfg).n_params()
+    return jnp.bfloat16 if n > 100e9 else F32
+
+
+# --------------------------------------------------------------------------- #
+# Step functions per shape kind
+# --------------------------------------------------------------------------- #
+
+
+def _bf16(params):
+    return jax.tree.map(lambda p: p.astype(jnp.bfloat16) if p.dtype == F32 and p.ndim >= 2 else p, params)
+
+
+def make_step(handle: api.ModelHandle, cfg, shape: ShapeSpec, ocfg: optim.OptimConfig):
+    """Returns (step_fn, donate_argnums). Signature per kind:
+
+      train  : step(state, batch)            state={params,opt}
+      prefill: step(params, tokens)
+      decode : step(params, cache, token)
+      gen    : step(params, latents, t, cond)
+      serve  : step(params, images)
+    """
+    plan = handle.plan
+
+    if shape.kind == "train":
+
+        def train_step(state, batch):
+            params = state["params"]
+
+            def loss_fn(p):
+                return handle.loss(_bf16(p), batch)
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            new_params, new_opt = optim.apply_updates(ocfg, params, grads, state["opt"])
+            return {"params": new_params, "opt": new_opt}, loss
+
+        return train_step, (0,)
+
+    if shape.kind == "prefill":
+
+        def prefill_step(params, tokens):
+            return tr.lm_prefill(params, tokens, cfg, plan)
+
+        return prefill_step, ()
+
+    if shape.kind == "decode":
+        pos = shape.seq_len - 1
+
+        def decode_step(params, cache, token):
+            return tr.lm_decode(params, cache, token, pos, cfg, plan)
+
+        return decode_step, (1,)
+
+    if shape.kind == "gen":
+
+        def denoise_step(params, latents, t, cond):
+            """One DDIM step (of shape.steps) — the sampler loop is host-side."""
+            eps = handle.forward(params, latents, t, cond).astype(F32)
+            eps = eps[..., : latents.shape[-1]]  # drop sigma channels if any
+            tt = t.astype(F32).reshape(-1, 1, 1, 1)
+            abar = jnp.cos(0.5 * jnp.pi * (tt / 1000.0)) ** 2
+            t_prev = jnp.maximum(tt - 1000.0 / shape.steps, 0.0)
+            abar_prev = jnp.cos(0.5 * jnp.pi * (t_prev / 1000.0)) ** 2
+            x0 = (latents.astype(F32) - jnp.sqrt(1 - abar) * eps) / jnp.sqrt(jnp.maximum(abar, 1e-8))
+            x_prev = jnp.sqrt(abar_prev) * x0 + jnp.sqrt(1 - abar_prev) * eps
+            return x_prev.astype(latents.dtype)
+
+        return denoise_step, ()
+
+    if shape.kind == "serve":
+
+        def serve_step(params, images):
+            return handle.forward(params, images)
+
+        return serve_step, ()
+
+    raise ValueError(shape.kind)
+
+
+# --------------------------------------------------------------------------- #
+# Input shardings
+# --------------------------------------------------------------------------- #
+
+
+def _batch_axes(rules):
+    b = rules.get("batch")
+    return b if b else None
+
+
+def input_shardings(cfg, shape: ShapeSpec, mesh, rules, plan: ParallelPlan) -> dict:
+    """PartitionSpec tree matching api.input_specs."""
+    bax = _batch_axes(rules)
+    kv = rules.get("kv_seq")
+    sp = rules.get("spatial") if rules.get("batch") is None else None
+    if isinstance(cfg, LMConfig):
+        if shape.kind == "train":
+            return {"batch": {"tokens": P(bax, None), "labels": P(bax, None)}}
+        if shape.kind == "prefill":
+            return {"tokens": P(bax, None)}
+        if shape.kind == "decode":
+            specs = api.input_specs(cfg, shape, plan)
+            cache_ps = {}
+            for name, sds in specs["cache"].items():
+                cache_ps[name] = P(*((None, bax, kv) + (None,) * (len(sds.shape) - 3)))
+            return {"cache": cache_ps, "token": P(bax)}
+    if isinstance(cfg, (DiTConfig, UNetConfig)):
+        lat_ps = P(bax, sp, None, None)
+        cond_ps = P(bax) if isinstance(cfg, DiTConfig) else P(bax, None, None)
+        if shape.kind == "train":
+            return {"batch": {"latents": lat_ps, "t": P(bax), "noise": lat_ps, "cond": cond_ps}}
+        return {"latents": lat_ps, "t": P(bax), "cond": cond_ps}
+    if isinstance(cfg, (ViTConfig, SwinConfig, ResNetConfig)):
+        img_ps = P(bax, None, None, None)
+        if shape.kind == "train":
+            return {"batch": {"images": img_ps, "labels": P(bax)}}
+        return {"images": img_ps}
+    raise TypeError(type(cfg))
+
+
+# --------------------------------------------------------------------------- #
+# Cell assembly
+# --------------------------------------------------------------------------- #
+
+
+@dataclass
+class Cell:
+    arch_id: str
+    shape: ShapeSpec
+    mesh: Any
+    cfg: Any
+    plan: ParallelPlan
+    rules: dict
+    handle: api.ModelHandle
+    step: Callable
+    donate: tuple
+    arg_structs: tuple  # ordered args for step
+    arg_shardings: tuple
+    n_params: int
+    n_active_params: int
+    out_shardings: Any = None  # pins outputs sharded (keeps grads scattered)
+
+
+def build_cell(arch_id: str, shape_name: str, mesh, *, analysis: bool = False,
+               plan_overrides: dict | None = None, cfg_override=None,
+               ocfg_overrides: dict | None = None) -> Cell:
+    spec = get_arch(arch_id)
+    shape = spec.shapes[shape_name]
+    base_cfg = cfg_override if cfg_override is not None else spec.full
+    cfg = api.config_for_shape(base_cfg, shape)
+    plan = make_plan(cfg, shape, mesh, analysis=analysis, overrides=plan_overrides)
+    rules = make_rules(cfg, shape, mesh)
+    sizes = {name: size for name, size in zip(mesh.axis_names, mesh.devices.shape)}
+    rules["_sizes"] = sizes
+    handle = api.build(cfg, plan)
+
+    ocfg = optim_policy(base_cfg) if shape.kind == "train" else optim.OptimConfig()
+    if ocfg_overrides:
+        ocfg = dataclasses.replace(ocfg, **ocfg_overrides)
+    step, donate = make_step(handle, cfg, shape, ocfg)
+
+    # ---- arg structs ----
+    pdt = param_dtype_policy(base_cfg, shape)
+    pstruct = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, pdt if s.dtype == jnp.bfloat16 else s.dtype),
+        handle.struct(),
+    )
+    pspec_tree = handle.pspecs(rules)
+    inputs = api.input_specs(cfg, shape, plan)
+    in_ps = input_shardings(cfg, shape, mesh, rules, plan)
+
+    out_shardings = None
+    if shape.kind == "train":
+        pspec_tree = tree_fsdp(pspec_tree, pstruct, mesh)
+        ostruct = optim.state_struct(ocfg, pstruct)
+        ospec = {
+            "step": P(),
+            "m": pspec_tree,
+            "v": pspec_tree,
+        }
+        if ocfg.compress_grads:
+            ospec["err"] = pspec_tree
+        state_struct = {"params": pstruct, "opt": ostruct}
+        state_spec = {"params": pspec_tree, "opt": ospec}
+        arg_structs = (state_struct, inputs["batch"])
+        arg_shardings = (state_spec, in_ps["batch"])
+        out_shardings = (state_spec, P())
+    elif shape.kind == "prefill":
+        arg_structs = (pstruct, inputs["tokens"])
+        arg_shardings = (pspec_tree, in_ps["tokens"])
+    elif shape.kind == "decode":
+        arg_structs = (pstruct, inputs["cache"], inputs["token"])
+        arg_shardings = (pspec_tree, in_ps["cache"], in_ps["token"])
+    elif shape.kind == "gen":
+        arg_structs = (pstruct, inputs["latents"], inputs["t"], inputs["cond"])
+        arg_shardings = (pspec_tree, in_ps["latents"], in_ps["t"], in_ps["cond"])
+    else:  # serve
+        arg_structs = (pstruct, inputs["images"])
+        arg_shardings = (pspec_tree, in_ps["images"])
+
+    return Cell(
+        arch_id=arch_id,
+        shape=shape,
+        mesh=mesh,
+        cfg=cfg,
+        plan=plan,
+        rules=rules,
+        handle=handle,
+        step=step,
+        donate=donate,
+        arg_structs=arg_structs,
+        arg_shardings=arg_shardings,
+        n_params=handle.n_params(),
+        n_active_params=getattr(base_cfg, "active_param_count", handle.n_params())
+        if isinstance(base_cfg, LMConfig)
+        else handle.n_params(),
+        out_shardings=out_shardings,
+    )
+
+
+def lower_cell(cell: Cell):
+    """lower + compile the cell's step under its mesh/rules context."""
+    shardings = jax.tree.map(
+        lambda ps: NamedSharding(cell.mesh, ps),
+        cell.arg_shardings,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    out_shardings = None
+    if cell.out_shardings is not None:
+        out_shardings = jax.tree.map(
+            lambda ps: NamedSharding(cell.mesh, ps),
+            cell.out_shardings,
+            is_leaf=lambda x: isinstance(x, P),
+        )
+    with cell.mesh, ax.sharding_ctx(cell.mesh, cell.rules):
+        jitted = jax.jit(cell.step, in_shardings=shardings, donate_argnums=cell.donate,
+                         out_shardings=out_shardings)
+        lowered = jitted.lower(*cell.arg_structs)
+        compiled = lowered.compile()
+    return lowered, compiled

@@ -1,0 +1,235 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run (assignment: MULTI-POD DRY-RUN + ROOFLINE ANALYSIS).
+
+For one (arch × shape × mesh) cell:
+  * lower + compile the step under the production mesh (proves sharding);
+  * memory_analysis()  -> fits-in-HBM proof (runtime scan/remat path);
+  * cost_analysis() + HLO collective parse -> roofline terms.
+
+XLA counts while-bodies once, so FLOP/byte/collective totals come from
+*unrolled* compiles. Deep LMs use the two-point diff method: compile
+unrolled depth L_a and L_a+1; the delta is the exact per-layer cost and
+total = cost(L_a) + (L - L_a)·delta. Everything else compiles fully
+unrolled directly.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen1.5-32b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out-dir results/dryrun
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+
+
+def _merge_coll(a: dict, b: dict, fb: float = 1.0) -> dict:
+    out = dict(a)
+    for k, v in b.items():
+        out[k] = out.get(k, 0) + fb * v
+    return out
+
+
+def run_cell(arch_id: str, shape_name: str, mesh_kind: str, *, plan_overrides=None, memory_check=True) -> dict:
+    from repro.configs.base import get_arch
+    from repro.launch import roofline as rl
+    from repro.launch.cells import build_cell, lower_cell
+    from repro.launch.mesh import make_production_mesh
+
+    spec = get_arch(arch_id)
+    shape = spec.shapes[shape_name]
+    rec: dict = {"arch": arch_id, "shape": shape_name, "mesh": mesh_kind, "kind": shape.kind}
+    if shape.skip:
+        rec.update(status="skipped", reason=shape.skip_reason)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = int(np.prod(mesh.devices.shape))
+    full_cfg = spec.full
+    is_lm = spec.family in ("lm", "moe-lm")
+    t0 = time.time()
+
+    # ---------- cost path (unrolled / diff) ----------
+    if is_lm and shape.kind in ("train", "prefill"):
+        fkd = full_cfg.moe.first_k_dense if full_cfg.moe is not None else 0
+        La, Lb = fkd + 1, fkd + 2
+        costs, colls = [], []
+        for L in (La, Lb):
+            cfg_L = dataclasses.replace(full_cfg, n_layers=L)
+            cell = build_cell(arch_id, shape_name, mesh, analysis=True,
+                              plan_overrides=plan_overrides, cfg_override=cfg_L)
+            lowered, compiled = lower_cell(cell)
+            costs.append(rl.cost_summary(compiled))
+            colls.append(rl.parse_collectives(compiled.as_text()))
+            del lowered, compiled
+        d_flops = costs[1]["flops"] - costs[0]["flops"]
+        d_bytes = costs[1]["bytes"] - costs[0]["bytes"]
+        n_extra = full_cfg.n_layers - La
+        flops = costs[0]["flops"] + n_extra * d_flops
+        bytes_ = costs[0]["bytes"] + n_extra * d_bytes
+        d_coll = {k: colls[1].get(k, 0) - colls[0].get(k, 0) for k in set(colls[0]) | set(colls[1])}
+        coll = _merge_coll(colls[0], d_coll, fb=n_extra)
+        rec["cost_method"] = f"diff(L={La},{Lb})x{full_cfg.n_layers}"
+    else:
+        cell = build_cell(arch_id, shape_name, mesh, analysis=True, plan_overrides=plan_overrides)
+        lowered, compiled = lower_cell(cell)
+        cs = rl.cost_summary(compiled)
+        flops, bytes_ = cs["flops"], cs["bytes"]
+        coll = rl.parse_collectives(compiled.as_text())
+        rec["cost_method"] = "direct"
+        if not (is_lm and memory_check and shape.kind in ("train", "prefill")):
+            rec["memory"] = rl.memory_summary(compiled)
+        del lowered, compiled
+    rec["compile_cost_s"] = round(time.time() - t0, 1)
+
+    # ---------- memory path (runtime scan/remat at full depth) ----------
+    if "memory" not in rec and memory_check:
+        t1 = time.time()
+        cell_m = build_cell(arch_id, shape_name, mesh, analysis=False, plan_overrides=plan_overrides)
+        lowered_m, compiled_m = lower_cell(cell_m)
+        rec["memory"] = rl.memory_summary(compiled_m)
+        rec["compile_memory_s"] = round(time.time() - t1, 1)
+        del lowered_m, compiled_m
+
+    # ---------- roofline ----------
+    from repro.models import api as mapi
+
+    n_params = mapi.build(full_cfg).n_params()
+    n_active = full_cfg.active_param_count if hasattr(full_cfg, "active_param_count") else n_params
+
+    coll_bytes = float(sum(coll.values()))
+    terms = rl.roofline_terms(flops, bytes_, coll_bytes)
+    tokens = shape.global_batch * shape.seq_len if shape.seq_len else 0
+    batch = shape.global_batch or shape.batch
+    if is_lm:
+        decode_attn = 0.0
+        if shape.kind == "decode":
+            hd = full_cfg.n_heads * (full_cfg.v_head_dim or full_cfg.d_head)
+            decode_attn = 4.0 * shape.seq_len * hd * full_cfg.n_layers * batch
+        mf = rl.model_flops(spec.family, shape.kind, n_active=n_active, tokens=tokens,
+                            batch=batch, decode_attn=decode_attn)
+    else:
+        # vision/diffusion: useful FLOPs = single-device batch-1 reference
+        # compile of the same forward (token/spatial reuse counted exactly).
+        ref = _ref_flops_per_sample(arch_id, shape_name)
+        mf = ref * batch * (3.0 if shape.kind == "train" else 1.0)  # bwd ≈ 2x fwd
+        rec["ref_fwd_flops_per_sample"] = ref
+
+    rec.update(
+        status="ok",
+        n_chips=n_chips,
+        n_params=n_params,
+        n_active_params=int(n_active),
+        hlo_flops_per_chip=flops,
+        hlo_bytes_per_chip=bytes_,
+        collective_bytes_per_chip=coll_bytes,
+        collectives=coll,
+        compute_s=terms.compute_s,
+        memory_s=terms.memory_s,
+        collective_s=terms.collective_s,
+        dominant=terms.dominant,
+        model_flops_global=mf,
+        model_flops_per_chip=mf / n_chips,
+        useful_ratio=(mf / n_chips) / max(flops, 1e-30),
+        roofline_fraction=(mf / n_chips / rl.PEAK_FLOPS_BF16) / max(terms.bound_s, 1e-30),
+    )
+    return rec
+
+
+def _ref_flops_per_sample(arch_id: str, shape_name: str) -> float:
+    """Unsharded single-sample forward cost on one device (no mesh)."""
+    import dataclasses as dc
+
+    import jax.numpy as jnp
+
+    from repro.configs.base import get_arch
+    from repro.launch import roofline as rl
+    from repro.models import api as mapi
+    from repro.models.transformer import ParallelPlan
+
+    spec = get_arch(arch_id)
+    shape = dc.replace(spec.shapes[shape_name], batch=1, global_batch=1)
+    cfg = mapi.config_for_shape(spec.full, shape)
+    handle = mapi.build(cfg, ParallelPlan(model_axis=1, analysis_unroll=True, remat=False))
+    ins = mapi.input_specs(cfg, shape, handle.plan)
+    pstruct = handle.struct()
+    if shape.kind == "train":
+        b = ins["batch"]
+        if "images" in b:
+            fwd = lambda p, bb: handle.forward(p, bb["images"])
+        else:
+            fwd = lambda p, bb: handle.forward(p, bb["latents"], bb["t"], bb["cond"])
+        compiled = jax.jit(fwd).lower(pstruct, b).compile()
+    elif shape.kind == "gen":
+        compiled = jax.jit(handle.forward).lower(pstruct, ins["latents"], ins["t"], ins["cond"]).compile()
+    else:
+        compiled = jax.jit(handle.forward).lower(pstruct, ins["images"]).compile()
+    return rl.cost_summary(compiled)["flops"]
+
+
+ALL_CELLS = "__all__"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out-dir", default="results/dryrun")
+    ap.add_argument("--no-memory", action="store_true")
+    ap.add_argument("--plan", nargs="*", default=[], help="k=v ParallelPlan overrides")
+    args = ap.parse_args()
+
+    from repro.configs.base import get_arch, list_archs
+
+    overrides = {}
+    for kv in args.plan:
+        k, v = kv.split("=")
+        overrides[k] = {"true": True, "false": False}.get(v.lower(), v if not v.lstrip("-").isdigit() else int(v))
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for a in list_archs():
+            for s in get_arch(a).shapes:
+                cells.append((a, s))
+    else:
+        cells.append((args.arch, args.shape))
+
+    n_ok = n_skip = n_fail = 0
+    for a, s in cells:
+        for mk in meshes:
+            tag = f"{a}__{s}__{mk}"
+            out_path = os.path.join(args.out_dir, tag + ".json")
+            if os.path.exists(out_path):
+                print(f"[skip-cached] {tag}", flush=True)
+                continue
+            t0 = time.time()
+            try:
+                rec = run_cell(a, s, mk, plan_overrides=overrides or None, memory_check=not args.no_memory)
+            except Exception as e:  # record the failure; the sweep continues
+                rec = {"arch": a, "shape": s, "mesh": mk, "status": "error",
+                       "error": f"{type(e).__name__}: {e}", "trace": traceback.format_exc()[-2000:]}
+            rec["wall_s"] = round(time.time() - t0, 1)
+            with open(out_path, "w") as f:
+                json.dump(rec, f, indent=2)
+            st = rec["status"]
+            n_ok += st == "ok"
+            n_skip += st == "skipped"
+            n_fail += st == "error"
+            print(f"[{st}] {tag} ({rec['wall_s']}s)"
+                  + (f" dominant={rec.get('dominant')}" if st == "ok" else "")
+                  + (f" err={rec.get('error','')[:120]}" if st == "error" else ""), flush=True)
+    print(f"done: ok={n_ok} skipped={n_skip} failed={n_fail}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

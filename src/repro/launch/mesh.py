@@ -1,0 +1,22 @@
+"""Production mesh construction (assignment-mandated shapes).
+
+A FUNCTION, not a module-level constant — importing this module never
+touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(model_axis: int = 1, data_axis: int = 1):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    model_axis = min(model_axis, n)
+    data_axis = min(data_axis, n // model_axis)
+    return jax.make_mesh((data_axis, model_axis), ("data", "model"))

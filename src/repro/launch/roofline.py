@@ -1,0 +1,121 @@
+"""Roofline accounting from compiled dry-run artifacts (assignment §Roofline).
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16 (394 int8) per chip, 819 GB/s HBM,
+~50 GB/s/link ICI, 16 GB HBM. The compiled module under GSPMD is the
+*per-device* program, so per-device cost_analysis numbers divide the
+assignment's ``chips ×`` out already.
+
+XLA counts while-bodies once, so callers must hand this module *unrolled*
+compiles (or diff-extrapolated totals — see dryrun.py).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+PEAK_FLOPS_BF16 = 197e12
+PEAK_FLOPS_INT8 = 394e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+HBM_BYTES = 16 * 1024**3
+
+_DT_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+    "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute")
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|f8e4m3fn|f8e5m2|s64|s32|s16|s8|u64|u32|u16|u8|pred|c64|c128)\[([0-9,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+(all-gather-start|all-reduce-start|all-gather|all-reduce|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)\("
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DT_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict[str, int]:
+    """Sum result-shape bytes per collective op type in a compiled HLO module.
+
+    Skips computations reached only via `while` bodies? No — the dry-run path
+    guarantees unrolled programs; every listed op executes once.
+    """
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        type_str, op = m.group(1), m.group(2)
+        op = op.replace("-start", "")
+        out[op] = out.get(op, 0) + _shape_bytes(type_str)
+    return out
+
+
+def cost_summary(compiled) -> dict:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return {"flops": float(ca.get("flops", 0.0)), "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+def memory_summary(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    return {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "peak_estimate_bytes": int(ma.argument_size_in_bytes + ma.output_size_in_bytes + ma.temp_size_in_bytes - ma.alias_size_in_bytes),
+    }
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s, "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def fraction_of_roofline(self) -> float:
+        """useful-time / bound-time if perfectly overlapped = compute/bound."""
+        return self.compute_s / max(self.bound_s, 1e-30)
+
+
+def roofline_terms(flops: float, bytes_: float, coll_bytes: float, *, peak=PEAK_FLOPS_BF16) -> Roofline:
+    return Roofline(flops / peak, bytes_ / HBM_BW, coll_bytes / ICI_BW)
+
+
+def model_flops(family: str, kind: str, *, n_active: int, tokens: int = 0, batch: int = 0,
+                decode_attn: float = 0.0) -> float:
+    """The 'useful FLOPs' convention (DESIGN.md §6):
+      LM train: 6·N·tokens; prefill: 2·N·tokens (+causal attn not counted);
+      decode:   2·N·batch + explicit attention term (dominates at 32k);
+      vision/diffusion: 2·N·batch fwd, 6·N·batch train (conv reuse makes the
+      HLO/model ratio > 1 by design — reported, not hidden).
+    """
+    if family in ("lm", "moe-lm"):
+        if kind == "train":
+            return 6.0 * n_active * tokens
+        if kind == "prefill":
+            return 2.0 * n_active * tokens
+        return 2.0 * n_active * batch + decode_attn
+    return (6.0 if kind == "train" else 2.0) * n_active * batch

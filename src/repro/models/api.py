@@ -1,0 +1,194 @@
+"""Unified model API: param specs, forward/loss/step functions, input specs.
+
+Everything the launcher needs for any assigned architecture:
+
+  build(arch, which)            -> ModelHandle (param spec + fns)
+  input_specs(arch, shape, ...) -> ShapeDtypeStruct stand-ins for the cell
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (
+    ArchSpec,
+    DiTConfig,
+    LMConfig,
+    ResNetConfig,
+    ShapeSpec,
+    SwinConfig,
+    UNetConfig,
+    ViTConfig,
+)
+from repro.models import dit as dit_lib
+from repro.models import resnet as resnet_lib
+from repro.models import swin as swin_lib
+from repro.models import transformer as tr
+from repro.models import unet as unet_lib
+from repro.models import vit as vit_lib
+from repro.models.layers import F32
+from repro.models.ptree import tree_count, tree_init, tree_pspec, tree_struct
+from repro.models.transformer import ParallelPlan
+
+CTX_TOKENS = 77  # stubbed text-conditioning length for UNet (frontend stub)
+
+
+@dataclass
+class ModelHandle:
+    cfg: Any
+    plan: ParallelPlan
+    param_spec: Any  # TensorSpec tree
+    family: str
+
+    # fns(params, ...) per family — see make_step_fn
+    forward: Callable = None
+    loss: Callable = None
+
+    def init(self, key, dtype=None):
+        return tree_init(self.param_spec, key, dtype=dtype)
+
+    def struct(self):
+        return tree_struct(self.param_spec)
+
+    def pspecs(self, rules):
+        return tree_pspec(self.param_spec, rules)
+
+    def n_params(self) -> int:
+        return tree_count(self.param_spec)
+
+
+def build(cfg, plan: ParallelPlan | None = None) -> ModelHandle:
+    plan = plan or ParallelPlan()
+    if isinstance(cfg, LMConfig):
+        spec = tr.lm_param_spec(cfg, plan)
+        h = ModelHandle(cfg, plan, spec, "lm")
+        h.forward = lambda p, tokens: tr.lm_forward(p, tokens, cfg, plan)[0]
+        h.loss = lambda p, batch: tr.lm_loss(p, batch, cfg, plan)
+        return h
+    if isinstance(cfg, ViTConfig):
+        spec = vit_lib.vit_param_spec(cfg)
+        h = ModelHandle(cfg, plan, spec, "vision")
+        h.forward = lambda p, images: vit_lib.vit_forward(p, images, cfg, unroll=plan.analysis_unroll)
+        h.loss = lambda p, batch: _cls_loss(h.forward, p, batch)
+        return h
+    if isinstance(cfg, SwinConfig):
+        spec = swin_lib.swin_param_spec(cfg)
+        h = ModelHandle(cfg, plan, spec, "vision")
+        h.forward = lambda p, images: swin_lib.swin_forward(p, images, cfg)
+        h.loss = lambda p, batch: _cls_loss(h.forward, p, batch)
+        return h
+    if isinstance(cfg, ResNetConfig):
+        spec = resnet_lib.resnet_param_spec(cfg)
+        h = ModelHandle(cfg, plan, spec, "vision")
+        h.forward = lambda p, images: resnet_lib.resnet_forward(p, images, cfg)
+        h.loss = lambda p, batch: _cls_loss(h.forward, p, batch)
+        return h
+    if isinstance(cfg, DiTConfig):
+        spec = dit_lib.dit_param_spec(cfg)
+        h = ModelHandle(cfg, plan, spec, "diffusion")
+        h.forward = lambda p, latents, t, cond: dit_lib.dit_forward(
+            p, latents, t, cond, cfg, unroll=plan.analysis_unroll
+        )
+        h.loss = lambda p, batch: _diffusion_loss(h.forward, p, batch, learn_sigma=cfg.learn_sigma)
+        return h
+    if isinstance(cfg, UNetConfig):
+        spec = unet_lib.unet_param_spec(cfg)
+        h = ModelHandle(cfg, plan, spec, "diffusion")
+        h.forward = lambda p, latents, t, cond: unet_lib.unet_forward(p, latents, t, cond, cfg)
+        h.loss = lambda p, batch: _diffusion_loss(h.forward, p, batch, learn_sigma=False)
+        return h
+    raise TypeError(f"unknown config type {type(cfg)}")
+
+
+def _cls_loss(forward, params, batch):
+    logits = forward(params, batch["images"]).astype(F32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["labels"][:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+def _diffusion_loss(forward, params, batch, *, learn_sigma: bool):
+    """Epsilon-prediction MSE at provided (t, noise) — DDPM objective."""
+    x0, t, noise, cond = batch["latents"], batch["t"], batch["noise"], batch["cond"]
+    abar = jnp.cos(0.5 * jnp.pi * (t.astype(F32) / 1000.0)) ** 2  # cosine schedule
+    abar = abar.reshape(-1, 1, 1, 1)
+    x_t = (jnp.sqrt(abar) * x0.astype(F32) + jnp.sqrt(1 - abar) * noise.astype(F32)).astype(x0.dtype)
+    pred = forward(params, x_t, t, cond).astype(F32)
+    eps = pred[..., : x0.shape[-1]] if learn_sigma else pred
+    return jnp.mean(jnp.square(eps - noise.astype(F32)))
+
+
+# --------------------------------------------------------------------------- #
+# input specs per (arch, shape) — ShapeDtypeStructs, never allocated
+# --------------------------------------------------------------------------- #
+
+
+def input_specs(cfg, shape: ShapeSpec, plan: ParallelPlan | None = None) -> dict:
+    plan = plan or ParallelPlan()
+    i32, bf16 = jnp.int32, jnp.bfloat16
+    if isinstance(cfg, LMConfig):
+        B, S = shape.global_batch, shape.seq_len
+        if shape.kind == "train":
+            return {
+                "batch": {
+                    "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                    "labels": jax.ShapeDtypeStruct((B, S), i32),
+                }
+            }
+        if shape.kind == "prefill":
+            return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if shape.kind == "decode":
+            return {
+                "cache": tr.cache_spec(cfg, plan, B, S),
+                "token": jax.ShapeDtypeStruct((B,), i32),
+            }
+    if isinstance(cfg, (DiTConfig, UNetConfig)):
+        B = shape.batch
+        lat = shape.img_res // cfg.latent_factor
+        cond = (
+            jax.ShapeDtypeStruct((B,), i32)
+            if isinstance(cfg, DiTConfig)
+            else jax.ShapeDtypeStruct((B, CTX_TOKENS, cfg.ctx_dim), bf16)
+        )
+        if shape.kind == "train":
+            return {
+                "batch": {
+                    "latents": jax.ShapeDtypeStruct((B, lat, lat, cfg.in_channels), bf16),
+                    "t": jax.ShapeDtypeStruct((B,), i32),
+                    "noise": jax.ShapeDtypeStruct((B, lat, lat, cfg.in_channels), bf16),
+                    "cond": cond,
+                }
+            }
+        return {  # gen: one denoise step of `shape.steps`
+            "latents": jax.ShapeDtypeStruct((B, lat, lat, cfg.in_channels), bf16),
+            "t": jax.ShapeDtypeStruct((B,), i32),
+            "cond": cond,
+        }
+    if isinstance(cfg, (ViTConfig, SwinConfig, ResNetConfig)):
+        B, R = shape.batch, shape.img_res
+        if shape.kind == "train":
+            return {
+                "batch": {
+                    "images": jax.ShapeDtypeStruct((B, R, R, 3), bf16),
+                    "labels": jax.ShapeDtypeStruct((B,), i32),
+                }
+            }
+        return {"images": jax.ShapeDtypeStruct((B, R, R, 3), bf16)}
+    raise TypeError(type(cfg))
+
+
+def config_for_shape(cfg, shape: ShapeSpec):
+    """Some archs need shape-dependent param trees (ViT pos-embed, Swin bias)."""
+    import dataclasses
+
+    if isinstance(cfg, SwinConfig) and shape.img_res and shape.img_res != cfg.img_res:
+        # Swin-384 protocol: window scales with resolution (7 -> 12 @ 384)
+        new_window = max(cfg.window * shape.img_res // cfg.img_res, 1)
+        return dataclasses.replace(cfg, img_res=shape.img_res, window=new_window)
+    if isinstance(cfg, ViTConfig) and shape.img_res and shape.img_res != cfg.img_res:
+        return dataclasses.replace(cfg, img_res=shape.img_res)
+    return cfg

@@ -1,0 +1,133 @@
+"""DiT (Diffusion Transformer) with adaLN-Zero conditioning. [arXiv:2212.09748]
+
+Operates on VAE latents (img_res / 8), patchified at ``cfg.patch``. The
+denoiser predicts epsilon (+ sigma when ``learn_sigma``). Position embedding
+is a fixed 2D sincos grid, so any latent resolution works (gen_1024 etc.).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import DiTConfig
+from repro.models.layers import F32, apply_mlp, apply_norm, attention_core, mlp_spec, norm_spec, sinusoidal_embedding
+from repro.models.ptree import ts
+from repro.sharding.axes import shard
+
+
+def _dit_layer_spec(d: int, n_heads: int) -> dict:
+    return {
+        "attn": {
+            "wqkv": ts((3, "stack"), (d, "embed"), (n_heads, "q_heads"), (d // n_heads, "head_dim")),
+            "wo": ts((n_heads, "q_heads"), (d // n_heads, "head_dim"), (d, "embed")),
+        },
+        "mlp": mlp_spec(d, 4 * d, "gelu"),
+        "adaln": {"w": ts((d, "embed"), (6 * d, "mlp"), init="zeros"), "b": ts((6 * d, "mlp"), init="zeros")},
+    }
+
+
+def dit_param_spec(cfg: DiTConfig) -> dict:
+    d = cfg.d_model
+    out_ch = cfg.in_channels * (2 if cfg.learn_sigma else 1)
+    return {
+        "x_embed": {"w": ts((cfg.patch**2 * cfg.in_channels, "conv_in"), (d, "embed")), "b": ts((d, "embed"), init="zeros")},
+        "t_embed": {
+            "w1": ts((256, "conv_in"), (d, "embed")),
+            "b1": ts((d, "embed"), init="zeros"),
+            "w2": ts((d, "embed"), (d, "mlp")),
+            "b2": ts((d, "mlp"), init="zeros"),
+        },
+        "y_embed": ts((cfg.n_classes + 1, "vocab"), (d, "embed"), scale=0.02, init="fan_in", fan_in=1),
+        "layers": {"all": _stack([_dit_layer_spec(d, cfg.n_heads) for _ in range(cfg.n_layers)])},
+        "final": {
+            "adaln": {"w": ts((d, "embed"), (2 * d, "mlp"), init="zeros"), "b": ts((2 * d, "mlp"), init="zeros")},
+            "w": ts((d, "embed"), (cfg.patch**2 * out_ch, "conv_out"), init="zeros"),
+            "b": ts((cfg.patch**2 * out_ch, "conv_out"), init="zeros"),
+        },
+    }
+
+
+def _stack(specs):
+    from repro.models.transformer import _stack_specs
+
+    return _stack_specs(specs)
+
+
+def _modulate(x, shift, scale):
+    return x * (1.0 + scale[:, None]) + shift[:, None]
+
+
+def _sincos_pos_2d(h: int, w: int, d: int):
+    def axis_emb(n):
+        omega = np.arange(d // 4, dtype=np.float64) / (d / 4)
+        omega = 1.0 / 10000**omega
+        pos = np.arange(n, dtype=np.float64)[:, None] * omega[None]
+        return np.concatenate([np.sin(pos), np.cos(pos)], axis=1)
+
+    eh, ew = axis_emb(h), axis_emb(w)
+    grid = np.concatenate(
+        [np.repeat(eh, w, axis=0), np.tile(ew, (h, 1))], axis=1
+    )
+    return jnp.asarray(grid, jnp.float32)  # (h*w, d)
+
+
+def dit_layer(p, x, c):
+    """x: (B,T,D); c: (B,D) conditioning."""
+    d = x.shape[-1]
+    mod = jnp.einsum("bd,de->be", jax.nn.silu(c.astype(F32)).astype(x.dtype), p["adaln"]["w"]) + p["adaln"]["b"]
+    sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mod, 6, axis=-1)
+    h = _modulate(_ln(x), sh1, sc1)
+    qkv = jnp.einsum("bsd,cdhk->cbshk", h, p["attn"]["wqkv"])
+    att = attention_core(qkv[0], qkv[1], qkv[2], causal=False, mode="sp")
+    x = x + g1[:, None] * jnp.einsum("bshk,hkd->bsd", att, p["attn"]["wo"])
+    h = _modulate(_ln(x), sh2, sc2)
+    return x + g2[:, None] * apply_mlp(p["mlp"], h, "gelu")
+
+
+def _ln(x, eps=1e-6):
+    xf = x.astype(F32)
+    mu = xf.mean(-1, keepdims=True)
+    var = jnp.square(xf - mu).mean(-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)  # no affine: adaLN provides it
+
+
+def dit_forward(params, latents, t, y, cfg: DiTConfig, *, unroll: bool = False):
+    """latents: (B, h, w, C) on the VAE grid; t: (B,); y: (B,) class ids.
+
+    Returns epsilon (+sigma) prediction with the same spatial shape.
+    """
+    from repro.models.vit import patchify
+
+    B, h, w, C = latents.shape
+    p_sz = cfg.patch
+    x = jnp.einsum("bsp,pd->bsd", patchify(latents, p_sz).astype(params["x_embed"]["w"].dtype),
+                   params["x_embed"]["w"]) + params["x_embed"]["b"]
+    x = x + _sincos_pos_2d(h // p_sz, w // p_sz, cfg.d_model).astype(x.dtype)
+    x = shard(x, "batch", "seq_sp", None)
+
+    te = sinusoidal_embedding(t, 256).astype(x.dtype)
+    te = jnp.einsum("bd,de->be", te, params["t_embed"]["w1"]) + params["t_embed"]["b1"]
+    te = jnp.einsum("bd,de->be", jax.nn.silu(te.astype(F32)).astype(x.dtype), params["t_embed"]["w2"]) + params["t_embed"]["b2"]
+    ye = jnp.take(params["y_embed"], y, axis=0)
+    c = te + ye
+
+    stacked = params["layers"]["all"]
+    if unroll:
+        for i in range(cfg.n_layers):
+            x = dit_layer(jax.tree.map(lambda a: a[i], stacked), x, c)
+    else:
+        def body(x, p_i):
+            return dit_layer(p_i, x, c), ()
+        x, _ = jax.lax.scan(body, x, stacked)
+
+    f = params["final"]
+    mod = jnp.einsum("bd,de->be", jax.nn.silu(c.astype(F32)).astype(x.dtype), f["adaln"]["w"]) + f["adaln"]["b"]
+    sh, sc = jnp.split(mod, 2, axis=-1)
+    x = _modulate(_ln(x), sh, sc)
+    x = jnp.einsum("bsd,dp->bsp", x, f["w"]) + f["b"]
+    out_ch = cfg.in_channels * (2 if cfg.learn_sigma else 1)
+    gh, gw = h // p_sz, w // p_sz
+    x = x.reshape(B, gh, gw, p_sz, p_sz, out_ch).transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(B, h, w, out_ch)

@@ -1,0 +1,236 @@
+"""Shared layers: norms, rotary embeddings, attention (TP / SP / decode), MLPs.
+
+Pure-function style: ``*_spec`` builds a TensorSpec tree, ``apply_*`` consumes
+the materialized tree. Activation sharding is expressed through logical axes
+(`sharding.axes.shard`), so the same code runs on 1 CPU device and on the
+(pod, data, model) production mesh.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.ptree import TensorSpec, ts
+from repro.sharding.axes import shard
+
+F32 = jnp.float32
+
+
+# --------------------------------------------------------------------------- #
+# Norms
+# --------------------------------------------------------------------------- #
+
+
+def norm_spec(d: int, kind: str) -> dict:
+    if kind == "rmsnorm":
+        return {"scale": ts((d, "embed"), dtype=F32, init="ones")}
+    return {"scale": ts((d, "embed"), dtype=F32, init="ones"), "bias": ts((d, "embed"), dtype=F32, init="zeros")}
+
+
+def apply_norm(p: dict, x, kind: str, eps: float = 1e-5):
+    xf = x.astype(F32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+        return (y * p["scale"]).astype(x.dtype)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Rotary position embeddings (partial rotation supported, NeoX interleaving)
+# --------------------------------------------------------------------------- #
+
+
+def apply_rope(x, positions, theta: float, rotate_dim: int):
+    """x: (..., S, H, Dh); rotate the first ``rotate_dim`` dims of Dh."""
+    if rotate_dim <= 0:
+        return x
+    d = rotate_dim
+    xr, xp = x[..., :d], x[..., d:]
+    half = d // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=F32) / half)
+    ang = positions.astype(F32)[..., :, None] * freqs[None, :]  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]  # broadcast over heads
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = xr[..., :half].astype(F32), xr[..., half:].astype(F32)
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return jnp.concatenate([rot.astype(x.dtype), xp], axis=-1)
+
+
+# --------------------------------------------------------------------------- #
+# Attention cores
+# --------------------------------------------------------------------------- #
+
+
+def _expand_kv(k, n_heads: int):
+    """(B,S,KH,D) -> (B,S,H,D) by static head-group gather (GQA)."""
+    kh = k.shape[2]
+    if kh == n_heads:
+        return k
+    mapping = np.arange(n_heads) // (n_heads // kh)
+    return k[:, :, mapping, :]
+
+
+def attention_core(
+    q,
+    k,
+    v,
+    *,
+    causal: bool,
+    q_positions=None,
+    kv_positions=None,
+    softmax_scale: Optional[float] = None,
+    mode: str = "tp",
+):
+    """Dense attention. q: (B,Sq,H,Dh) k/v: (B,Sk,H,Dh_v).
+
+    mode:
+      "tp"     — heads sharded over `model` (requires divisible/padded heads)
+      "sp"     — q sharded over sequence (model axis), full K/V: the
+                 sequence-parallel fallback for non-divisible head counts
+      "decode" — K/V sharded over sequence (flash-decode style split-K;
+                 GSPMD inserts the distributed-softmax collectives)
+    Softmax in f32. Returns (B,Sq,H,Dh_v).
+    """
+    B, Sq, H, Dh = q.shape
+    Sk = k.shape[1]
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(Dh)
+    if mode == "sp":
+        q = shard(q, "batch", "seq_sp", None, None)
+        k = shard(k, "batch", None, None, None)
+        v = shard(v, "batch", None, None, None)
+    elif mode == "decode":
+        q = shard(q, "batch", None, None, None)
+        k = shard(k, "batch", "kv_seq", None, None)
+        v = shard(v, "batch", "kv_seq", None, None)
+    else:
+        q = shard(q, "batch", None, "heads_act", None)
+        k = shard(k, "batch", None, "heads_act", None)
+        v = shard(v, "batch", None, "heads_act", None)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(F32) * scale
+    if causal:
+        if q_positions is None:
+            q_positions = jnp.arange(Sq)
+        if kv_positions is None:
+            kv_positions = jnp.arange(Sk)
+        mask = q_positions[:, None] >= kv_positions[None, :]
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    if mode == "sp":
+        out = shard(out, "batch", "seq_sp", None, None)
+    elif mode == "tp":
+        out = shard(out, "batch", None, "heads_act", None)
+    return out
+
+
+def attention_blockwise(q, k, v, *, causal: bool, chunk: int = 1024, unroll: bool = False, sp: bool = False):
+    """Flash-style blockwise attention over KV chunks (pure jnp oracle).
+
+    Keeps peak memory at O(Sq * chunk) per head instead of O(Sq * Sk). Used
+    (a) as the prefill path for long sequences and (b) as the reference for
+    ``kernels/flash_attention``. ``unroll=True`` is the dry-run analysis mode
+    (XLA counts while-bodies once; unrolled bodies are counted exactly).
+    """
+    B, Sq, H, Dh = q.shape
+    Sk = k.shape[1]
+    n_chunks = max(Sk // chunk, 1)
+    chunk = Sk // n_chunks
+    scale = 1.0 / math.sqrt(Dh)
+    qpos = jnp.arange(Sq)
+    if sp:
+        q = shard(q, "batch", "seq_sp", None, None)
+    else:
+        q = shard(q, "batch", None, "heads_act", None)
+
+    kc = k.reshape(B, n_chunks, chunk, H, Dh)
+    vc = v.reshape(B, n_chunks, chunk, H, v.shape[-1])
+
+    @jax.checkpoint  # flash-style bwd: recompute p per chunk, never store it
+    def _chunk(carry, kb, vb, start):
+        m, l, acc = carry
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kb).astype(F32) * scale
+        if causal:
+            kpos = start + jnp.arange(chunk)
+            s = jnp.where((qpos[:, None] >= kpos[None, :])[None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        acc_new = acc * corr[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vb.astype(F32))
+        return (m_new, l_new, acc_new)
+
+    def body(carry, inputs):
+        kb, vb, start = inputs
+        return _chunk(carry, kb, vb, start), ()
+
+    init = (
+        jnp.full((B, H, Sq), -jnp.inf, F32),
+        jnp.zeros((B, H, Sq), F32),
+        jnp.zeros((B, H, Sq, v.shape[-1]), F32),
+    )
+    starts = jnp.arange(n_chunks) * chunk
+    xs = (kc.swapaxes(0, 1), vc.swapaxes(0, 1), starts)
+    if unroll:
+        carry = init
+        for i in range(n_chunks):
+            carry, _ = body(carry, jax.tree.map(lambda a: a[i], xs))
+    else:
+        carry, _ = jax.lax.scan(body, init, xs)
+    m, l, acc = carry
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.swapaxes(1, 2).astype(q.dtype)  # (B,Sq,H,Dv)
+
+
+# --------------------------------------------------------------------------- #
+# MLPs
+# --------------------------------------------------------------------------- #
+
+
+def mlp_spec(d: int, d_ff: int, act: str) -> dict:
+    if act == "swiglu":
+        return {
+            "wg": ts((d, "embed"), (d_ff, "mlp")),
+            "wu": ts((d, "embed"), (d_ff, "mlp")),
+            "wd": ts((d_ff, "mlp"), (d, "embed")),
+        }
+    return {"wi": ts((d, "embed"), (d_ff, "mlp")), "wo": ts((d_ff, "mlp"), (d, "embed"))}
+
+
+def apply_mlp(p: dict, x, act: str):
+    if act == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, p["wg"])
+        u = jnp.einsum("...d,df->...f", x, p["wu"])
+        g = shard(g, *(["batch"] + [None] * (g.ndim - 2) + ["mlp_act"]))
+        h = (jax.nn.silu(g.astype(F32)).astype(x.dtype)) * u
+        return jnp.einsum("...f,fd->...d", h, p["wd"])
+    h = jnp.einsum("...d,df->...f", x, p["wi"])
+    h = shard(h, *(["batch"] + [None] * (h.ndim - 2) + ["mlp_act"]))
+    h = jax.nn.gelu(h.astype(F32), approximate=True).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, p["wo"])
+
+
+# --------------------------------------------------------------------------- #
+# Misc
+# --------------------------------------------------------------------------- #
+
+
+def sinusoidal_embedding(t, dim: int, max_period: float = 10_000.0):
+    """Diffusion timestep embedding. t: (B,) -> (B, dim)."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(max_period) * jnp.arange(half, dtype=F32) / half)
+    ang = t.astype(F32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.cos(ang), jnp.sin(ang)], axis=-1)
+
+
+def pad_heads(n_heads: int, model_axis: int) -> int:
+    """Round head count up to a multiple of the model axis (DESIGN.md §5)."""
+    if model_axis <= 1 or n_heads % model_axis == 0:
+        return n_heads
+    return ((n_heads + model_axis - 1) // model_axis) * model_axis

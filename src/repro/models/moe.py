@@ -1,0 +1,135 @@
+"""Mixture-of-Experts FFN: GShard-style capacity dispatch, sort-based (no giant
+one-hots), expert-parallel over the `model` mesh axis.
+
+Two dispatch modes (ParallelPlan.moe_grouped_dispatch):
+  * global (G=1, baseline): one sort/scatter over all tokens. Simple, but the
+    global scatter forces GSPMD to all-reduce full dispatch buffers
+    (measured: 139 GB + 64 GB per arctic layer — EXPERIMENTS.md §Perf).
+  * grouped (G=data shards, hillclimb): dispatch independently per data-shard
+    group; sort/gather/scatter are shard-local and the only cross-shard
+    movement is the token<->expert exchange (an all-to-all over `model`).
+
+Supports DeepSeek-style shared experts and Arctic-style parallel dense
+residual FFN. Returns (output, aux_load_balance_loss).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import apply_mlp, mlp_spec
+from repro.models.ptree import ts
+from repro.sharding.axes import shard
+
+F32 = jnp.float32
+
+
+def moe_spec(d: int, cfg: MoEConfig, act: str) -> dict:
+    e, f = cfg.n_routed, cfg.d_ff_expert
+    spec = {
+        "router": ts((d, "embed"), (e, "experts"), dtype=F32),
+        "wg": ts((e, "experts"), (d, "embed"), (f, "mlp")),
+        "wu": ts((e, "experts"), (d, "embed"), (f, "mlp")),
+        "wd": ts((e, "experts"), (f, "mlp"), (d, "embed")),
+    }
+    if act != "swiglu":
+        spec = {
+            "router": spec["router"],
+            "wi": ts((e, "experts"), (d, "embed"), (f, "mlp")),
+            "wo": ts((e, "experts"), (f, "mlp"), (d, "embed")),
+        }
+    if cfg.n_shared:
+        spec["shared"] = mlp_spec(d, cfg.d_ff_expert * cfg.n_shared, act)
+    if cfg.dense_residual_ff:
+        spec["dense"] = mlp_spec(d, cfg.dense_residual_ff, act)
+    return spec
+
+
+def capacity_for(n_tokens: int, cfg: MoEConfig) -> int:
+    c = math.ceil(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_routed)
+    return max(8, ((c + 7) // 8) * 8)  # pad to 8 for TPU lane alignment
+
+
+def apply_moe(p: dict, x, cfg: MoEConfig, act: str, *, groups: int = 1):
+    """x: (B, S, D) -> (out, aux_loss)."""
+    B, S, D = x.shape
+    G = groups if (groups > 1 and B % groups == 0) else 1
+    xf = x.reshape(G, B * S // G, D)
+    xf = shard(xf, "batch", None, None)
+    out, aux = _moe_tokens(p, xf, cfg, act)
+    out = shard(out.reshape(B, S, D), "batch", None, None)
+    if "shared" in p:
+        out = out + apply_mlp(p["shared"], x, act)
+    if "dense" in p:
+        out = out + apply_mlp(p["dense"], x, act)
+    return out, aux
+
+
+def _moe_tokens(p: dict, xf, cfg: MoEConfig, act: str):
+    """Batched dispatch+compute. xf: (G, T, D) -> ((G, T, D), aux)."""
+    G, T, D = xf.shape
+    E, K = cfg.n_routed, cfg.top_k
+    C = capacity_for(T, cfg)
+    g_idx = jnp.arange(G)[:, None]
+
+    logits = jnp.einsum("gtd,de->gte", xf.astype(F32), p["router"])
+    gates = jax.nn.softmax(logits, axis=-1)  # (G, T, E)
+    top_v, top_i = jax.lax.top_k(gates, K)  # (G, T, K)
+    top_v = top_v / jnp.maximum(top_v.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balance aux loss (Switch/GShard form) ----
+    me = gates.mean((0, 1))
+    ce = jnp.zeros((E,), F32).at[top_i.reshape(-1)].add(1.0) / (G * T * K)
+    aux = cfg.aux_loss_coef * E * jnp.sum(me * ce)
+
+    # ---- sort-based capacity dispatch (per group, GATHER-only) ----
+    # Scatter-based dispatch makes GSPMD all-reduce the full dispatch buffer
+    # ("involuntary full rematerialization"); building the buffer with
+    # take_along_axis gathers avoids that entirely (EXPERIMENTS.md §Perf).
+    flat_e = top_i.reshape(G, T * K)
+    sort_idx = jnp.argsort(flat_e, axis=-1)  # slots grouped by expert
+    sorted_e = jnp.take_along_axis(flat_e, sort_idx, axis=-1)
+    first_occ = jax.vmap(lambda a: jnp.searchsorted(a, a, side="left"))(sorted_e)
+    pos_in_e = jnp.arange(T * K)[None] - first_occ  # rank within expert
+    valid = pos_in_e < C
+    slot = jnp.where(valid, sorted_e * C + pos_in_e, E * C)  # E*C == drop bin
+    token_of = sort_idx // K
+
+    # slot -> sorted position: group start + offset within capacity
+    starts = jax.vmap(lambda a: jnp.searchsorted(a, jnp.arange(E), side="left"))(sorted_e)  # (G, E)
+    ends = jax.vmap(lambda a: jnp.searchsorted(a, jnp.arange(E), side="right"))(sorted_e)
+    cand = starts[:, :, None] + jnp.arange(C)[None, None]  # (G, E, C) sorted positions
+    slot_valid = cand < ends[:, :, None]
+    cand_flat = jnp.clip(cand.reshape(G, E * C), 0, T * K - 1)
+    tok_for_slot = jnp.take_along_axis(token_of, cand_flat, axis=-1)  # (G, E*C)
+    buf = jnp.take_along_axis(xf, tok_for_slot[..., None], axis=1)  # gather, no scatter
+    buf = jnp.where(slot_valid.reshape(G, E * C)[..., None], buf, 0)
+    buf = buf.reshape(G, E, C, D)
+    buf = shard(buf, "batch", "experts_act", None, None)
+
+    # ---- grouped expert FFN ----
+    if "wg" in p:
+        g = jnp.einsum("gecd,edf->gecf", buf, p["wg"])
+        u = jnp.einsum("gecd,edf->gecf", buf, p["wu"])
+        g = shard(g, "batch", "experts_act", None, "mlp_act")
+        h = jax.nn.silu(g.astype(F32)).astype(xf.dtype) * u
+        out_buf = jnp.einsum("gecf,efd->gecd", h, p["wd"])
+    else:
+        h = jnp.einsum("gecd,edf->gecf", buf, p["wi"])
+        h = shard(h, "batch", "experts_act", None, "mlp_act")
+        h = jax.nn.gelu(h.astype(F32), approximate=True).astype(xf.dtype)
+        out_buf = jnp.einsum("gecf,efd->gecd", h, p["wo"])
+    out_buf = shard(out_buf, "batch", "experts_act", None, None)
+    out_flat = out_buf.reshape(G, E * C, D)
+    out_flat = jnp.concatenate([out_flat, jnp.zeros((G, 1, D), xf.dtype)], axis=1)  # drop bin
+
+    # ---- combine (gather-only: invert the sort permutation) ----
+    inv_sort = jnp.argsort(sort_idx, axis=-1)
+    slot_sorted = jnp.where(valid, slot, E * C).astype(jnp.int32)
+    slot_unsorted = jnp.take_along_axis(slot_sorted, inv_sort, axis=-1)
+    vals = jnp.take_along_axis(out_flat, slot_unsorted[..., None], axis=1).reshape(G, T, K, D)
+    out = jnp.einsum("gtkd,gtk->gtd", vals.astype(F32), top_v).astype(xf.dtype)
+    return out, aux

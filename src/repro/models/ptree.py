@@ -1,0 +1,105 @@
+"""Parameter-tree specification: one source of truth for init / dry-run / sharding.
+
+A model's parameters are described as a pytree of :class:`TensorSpec` leaves.
+From that single tree we derive:
+
+  * ``tree_init``    — materialized parameters (jax.random, fan-in scaled)
+  * ``tree_struct``  — ``jax.ShapeDtypeStruct`` stand-ins (dry-run; no allocation)
+  * ``tree_pspec``   — ``PartitionSpec`` per leaf via logical-axis rules
+  * ``tree_bytes``   — analytic parameter bytes (memory napkin math)
+
+Logical axis names used across the zoo (resolved by ``sharding/axes.py``):
+  layers, vocab, embed, q_heads, kv_heads, head_dim, mlp, experts, kv_lora,
+  conv_in, conv_out, classes, stack (never sharded), plus ``None``.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec
+
+
+@dataclass(frozen=True)
+class TensorSpec:
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]
+    dtype: Any = jnp.bfloat16
+    init: str = "fan_in"  # fan_in | zeros | ones | normal(<scale via init_scale>)
+    init_scale: float = 1.0
+    fan_in: int = 0  # 0 => product of all dims except the last
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def ts(*shape_axes, dtype=jnp.bfloat16, init="fan_in", scale=1.0, fan_in=0) -> TensorSpec:
+    """ts((n, 'embed'), (m, 'mlp'), ...) — (size, logical_axis) pairs."""
+    shape = tuple(s for s, _ in shape_axes)
+    axes = tuple(a for _, a in shape_axes)
+    return TensorSpec(shape, axes, dtype=dtype, init=init, init_scale=scale, fan_in=fan_in)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, TensorSpec)
+
+
+def tree_init(spec_tree, key, dtype=None):
+    """Materialize parameters. ``dtype`` overrides every leaf dtype if given."""
+    leaves, treedef = jax.tree.flatten(spec_tree, is_leaf=_is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = []
+    for k, leaf in zip(keys, leaves):
+        dt = dtype or leaf.dtype
+        if leaf.init == "zeros":
+            v = jnp.zeros(leaf.shape, dt)
+        elif leaf.init == "ones":
+            v = jnp.ones(leaf.shape, dt)
+        else:
+            fan = leaf.fan_in or (int(np.prod(leaf.shape[:-1])) if len(leaf.shape) > 1 else leaf.shape[0])
+            std = leaf.init_scale / math.sqrt(max(fan, 1))
+            v = (jax.random.normal(k, leaf.shape, jnp.float32) * std).astype(dt)
+        vals.append(v)
+    return jax.tree.unflatten(treedef, vals)
+
+
+def tree_struct(spec_tree):
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), spec_tree, is_leaf=_is_spec
+    )
+
+
+def tree_pspec(spec_tree, rules: dict[str, Optional[str]]):
+    """Map logical axes -> mesh axes. Axes missing from rules are unsharded.
+
+    A mesh axis is dropped (treated as replicated) if the dim size is not
+    divisible by the mesh axis size recorded in ``rules['_sizes']``.
+    """
+    sizes = rules.get("_sizes", {})
+
+    def one(l: TensorSpec):
+        spec, used = [], set()
+        for dim, ax in zip(l.shape, l.axes):
+            mesh_ax = rules.get(ax) if ax else None
+            if mesh_ax is None or mesh_ax in used or dim % max(sizes.get(mesh_ax, 1), 1) != 0:
+                spec.append(None)
+            else:
+                spec.append(mesh_ax)
+                used.add(mesh_ax)
+        return PartitionSpec(*spec)
+
+    return jax.tree.map(one, spec_tree, is_leaf=_is_spec)
+
+
+def tree_bytes(spec_tree, bytes_per_el: int = 2) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=_is_spec)
+    return sum(int(np.prod(l.shape)) * bytes_per_el for l in leaves)
+
+
+def tree_count(spec_tree) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=_is_spec)
+    return sum(int(np.prod(l.shape)) for l in leaves)

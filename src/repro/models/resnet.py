@@ -1,0 +1,77 @@
+"""ResNet-v1.5 with bottleneck blocks. [arXiv:1512.03385]
+
+BatchNorm is folded to inference-style scale/bias ("frozen BN" — standard for
+serving; training uses it as a learned affine, which keeps the step function
+pure without cross-device batch stats).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ResNetConfig
+from repro.models.layers import F32
+from repro.models.ptree import ts
+from repro.sharding.axes import shard
+
+
+def _conv_spec(cin, cout, k):
+    return {
+        "w": ts((k, None), (k, None), (cin, "conv_in"), (cout, "conv_out"), fan_in=k * k * cin),
+        "scale": ts((cout, "conv_out"), dtype=F32, init="ones"),
+        "bias": ts((cout, "conv_out"), dtype=F32, init="zeros"),
+    }
+
+
+def _conv(p, x, stride=1, act=True):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"].astype(x.dtype), (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    y = y.astype(F32) * p["scale"] + p["bias"]
+    y = jax.nn.relu(y) if act else y
+    return y.astype(x.dtype)
+
+
+def _bottleneck_spec(cin, mid, cout, downsample):
+    spec = {"c1": _conv_spec(cin, mid, 1), "c2": _conv_spec(mid, mid, 3), "c3": _conv_spec(mid, cout, 1)}
+    if downsample:
+        spec["proj"] = _conv_spec(cin, cout, 1)
+    return spec
+
+
+def _bottleneck(p, x, stride):
+    idn = x
+    y = _conv(p["c1"], x)
+    y = _conv(p["c2"], y, stride=stride)
+    y = _conv(p["c3"], y, act=False)
+    if "proj" in p:
+        idn = _conv(p["proj"], x, stride=stride, act=False)
+    return jnp.maximum(y + idn, 0.0).astype(x.dtype)
+
+
+def resnet_param_spec(cfg: ResNetConfig) -> dict:
+    spec = {"stem": _conv_spec(3, cfg.width, 7)}
+    cin = cfg.width
+    for i, dep in enumerate(cfg.depths):
+        mid = cfg.width * 2**i
+        cout = mid * 4
+        blocks = {}
+        for b in range(dep):
+            blocks[f"b{b}"] = _bottleneck_spec(cin, mid, cout, downsample=(b == 0))
+            cin = cout
+        spec[f"stage{i}"] = blocks
+    spec["head"] = {"w": ts((cin, "embed"), (cfg.n_classes, "classes")), "b": ts((cfg.n_classes, "classes"), init="zeros")}
+    return spec
+
+
+def resnet_forward(params, images, cfg: ResNetConfig, **_):
+    x = shard(images, "batch", None, None, None)
+    x = _conv(params["stem"], x, stride=2)
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 3, 3, 1), (1, 2, 2, 1), "SAME")
+    for i, dep in enumerate(cfg.depths):
+        for b in range(dep):
+            stride = 2 if (b == 0 and i > 0) else 1
+            x = _bottleneck(params[f"stage{i}"][f"b{b}"], x, stride)
+        x = shard(x, "batch", None, None, None)
+    x = jnp.mean(x.astype(F32), axis=(1, 2))
+    return jnp.einsum("bd,dc->bc", x, params["head"]["w"].astype(F32)) + params["head"]["b"]

@@ -1,0 +1,146 @@
+"""Swin Transformer: windowed + shifted-window attention, patch merging.
+[arXiv:2103.14030]
+
+Relative-position bias per head; cyclic shift on odd layers within a stage.
+Input resolutions must make each stage's feature map divisible by the window
+(true for 224/4 and 384/4 with window 7... 384/4=96, 96/7 is not integer —
+the standard Swin-384 uses window 12; we follow that rule: window is scaled
+by img_res/224 when divisible, else features are padded).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SwinConfig
+from repro.models.layers import F32, apply_mlp, apply_norm, mlp_spec, norm_spec
+from repro.models.ptree import ts
+from repro.sharding.axes import shard
+
+
+def _rel_index(window: int) -> np.ndarray:
+    coords = np.stack(np.meshgrid(np.arange(window), np.arange(window), indexing="ij"))
+    flat = coords.reshape(2, -1)
+    rel = flat[:, :, None] - flat[:, None, :]
+    rel = rel.transpose(1, 2, 0) + window - 1
+    return (rel[..., 0] * (2 * window - 1) + rel[..., 1]).astype(np.int32)  # (W², W²)
+
+
+def _win_layer_spec(dim: int, n_heads: int, window: int) -> dict:
+    return {
+        "ln1": norm_spec(dim, "layernorm"),
+        "attn": {
+            "wqkv": ts((3, "stack"), (dim, "embed"), (n_heads, "q_heads"), (dim // n_heads, "head_dim")),
+            "bqkv": ts((3, "stack"), (n_heads, "q_heads"), (dim // n_heads, "head_dim"), init="zeros"),
+            "wo": ts((n_heads, "q_heads"), (dim // n_heads, "head_dim"), (dim, "embed")),
+            "rel_bias": ts(((2 * window - 1) ** 2, None), (n_heads, "q_heads"), scale=0.02, init="fan_in", fan_in=1),
+        },
+        "ln2": norm_spec(dim, "layernorm"),
+        "mlp": mlp_spec(dim, 4 * dim, "gelu"),
+    }
+
+
+def _window_attention(p, x, window: int, shift: int, H: int, W: int):
+    """x: (B, H, W, C)."""
+    B, _, _, C = x.shape
+    n_heads = p["wqkv"].shape[2]
+    d_head = p["wqkv"].shape[3]
+    if shift:
+        x = jnp.roll(x, (-shift, -shift), axis=(1, 2))
+    nh, nw = H // window, W // window
+    xw = x.reshape(B, nh, window, nw, window, C).transpose(0, 1, 3, 2, 4, 5)
+    xw = xw.reshape(B * nh * nw, window * window, C)
+
+    qkv = jnp.einsum("nsd,cdhk->cnshk", xw, p["wqkv"]) + p["bqkv"][:, None, None]
+    q, k, v = qkv[0], qkv[1], qkv[2]
+    scores = jnp.einsum("nqhk,nshk->nhqs", q, k).astype(F32) / np.sqrt(d_head)
+    bias = p["rel_bias"][jnp.asarray(_rel_index(window))]  # (W²,W²,Hd)
+    scores = scores + bias.transpose(2, 0, 1)[None].astype(F32)
+    if shift:
+        mask = _shift_mask(H, W, window, shift)  # (nWin, W², W²)
+        scores = scores.reshape(B, nh * nw, n_heads, window**2, window**2)
+        scores = jnp.where(mask[None, :, None], scores, -1e30)
+        scores = scores.reshape(B * nh * nw, n_heads, window**2, window**2)
+    probs = jax.nn.softmax(scores, -1).astype(x.dtype)
+    out = jnp.einsum("nhqs,nshk->nqhk", probs, v)
+    out = jnp.einsum("nqhk,hkd->nqd", out, p["wo"])
+    out = out.reshape(B, nh, nw, window, window, C).transpose(0, 1, 3, 2, 4, 5).reshape(B, H, W, C)
+    if shift:
+        out = jnp.roll(out, (shift, shift), axis=(1, 2))
+    return out
+
+
+def _shift_mask(H: int, W: int, window: int, shift: int) -> jnp.ndarray:
+    img = np.zeros((H, W), np.int32)
+    cnt = 0
+    for hs in (slice(0, -window), slice(-window, -shift), slice(-shift, None)):
+        for ws in (slice(0, -window), slice(-window, -shift), slice(-shift, None)):
+            img[hs, ws] = cnt
+            cnt += 1
+    img = np.roll(img, (-shift, -shift), axis=(0, 1))
+    nh, nw = H // window, W // window
+    wins = img.reshape(nh, window, nw, window).transpose(0, 2, 1, 3).reshape(-1, window * window)
+    return jnp.asarray(wins[:, :, None] == wins[:, None, :])
+
+
+def swin_window_for(cfg: SwinConfig, img_res: int) -> int:
+    if img_res == cfg.img_res:
+        return cfg.window
+    scaled = cfg.window * img_res // cfg.img_res
+    return max(scaled, 1)
+
+
+def swin_param_spec(cfg: SwinConfig, img_res: int | None = None) -> dict:
+    img_res = img_res or cfg.img_res
+    window = swin_window_for(cfg, img_res)
+    spec = {
+        "patch_embed": {"w": ts((cfg.patch**2 * 3, "conv_in"), (cfg.dims[0], "embed")), "b": ts((cfg.dims[0], "embed"), init="zeros")},
+        "pos_norm": norm_spec(cfg.dims[0], "layernorm"),
+    }
+    for i, (dep, dim) in enumerate(zip(cfg.depths, cfg.dims)):
+        stage = {f"l{j}": _win_layer_spec(dim, cfg.heads[i], window) for j in range(dep)}
+        if i < len(cfg.dims) - 1:
+            stage["merge"] = {
+                "norm": norm_spec(4 * dim, "layernorm"),
+                "w": ts((4 * dim, "conv_in"), (cfg.dims[i + 1], "embed")),
+            }
+        spec[f"stage{i}"] = stage
+    spec["final_norm"] = norm_spec(cfg.dims[-1], "layernorm")
+    spec["head"] = {"w": ts((cfg.dims[-1], "embed"), (cfg.n_classes, "classes")), "b": ts((cfg.n_classes, "classes"), init="zeros")}
+    return spec
+
+
+def swin_forward(params, images, cfg: SwinConfig, **_):
+    from repro.models.vit import patchify
+
+    B, R = images.shape[0], images.shape[1]
+    window = swin_window_for(cfg, R)
+    x = jnp.einsum("bsp,pd->bsd", patchify(images, cfg.patch).astype(params["patch_embed"]["w"].dtype),
+                   params["patch_embed"]["w"]) + params["patch_embed"]["b"]
+    x = apply_norm(params["pos_norm"], x, "layernorm")
+    H = W = R // cfg.patch
+    x = x.reshape(B, H, W, -1)
+    x = shard(x, "batch", None, None, None)
+
+    for i, dep in enumerate(cfg.depths):
+        stage = params[f"stage{i}"]
+        for j in range(dep):
+            p = stage[f"l{j}"]
+            shift = window // 2 if j % 2 == 1 else 0
+            h = apply_norm(p["ln1"], x, "layernorm")
+            x = x + _window_attention(p["attn"], h, window, shift, H, W)
+            h = apply_norm(p["ln2"], x, "layernorm")
+            x = x + apply_mlp(p["mlp"], h, "gelu")
+        if i < len(cfg.depths) - 1:
+            m = stage["merge"]
+            x = x.reshape(B, H // 2, 2, W // 2, 2, x.shape[-1]).transpose(0, 1, 3, 2, 4, 5)
+            x = x.reshape(B, H // 2, W // 2, 4 * x.shape[-1])
+            x = apply_norm(m["norm"], x, "layernorm")
+            x = jnp.einsum("bhwd,de->bhwe", x, m["w"])
+            H, W = H // 2, W // 2
+            x = shard(x, "batch", None, None, None)
+    x = apply_norm(params["final_norm"], x, "layernorm")
+    x = jnp.mean(x.reshape(B, H * W, -1).astype(F32), axis=1)
+    return jnp.einsum("bd,dc->bc", x, params["head"]["w"].astype(F32)) + params["head"]["b"]

@@ -1,0 +1,604 @@
+"""Decoder-only transformer LM: GQA (+QKV bias), MLA (DeepSeek-V2), MoE.
+
+Three entry points per the assigned shape kinds:
+  lm_loss      — full-sequence causal LM loss (train_*)
+  lm_prefill   — full-sequence forward -> (last-token logits, kv cache)
+  lm_decode    — one-token step against a seq-sharded KV cache (decode_*)
+
+Layer iteration: ``plan.analysis_unroll=True`` uses a python loop (exact
+cost_analysis in the dry-run — XLA counts while-bodies once); otherwise
+``lax.scan`` over stacked layer params (+ optional remat) for compile-time
+and memory sanity at runtime.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LMConfig
+from repro.models import moe as moe_lib
+from repro.models.layers import (
+    F32,
+    apply_mlp,
+    apply_norm,
+    apply_rope,
+    attention_blockwise,
+    attention_core,
+    _expand_kv,
+    mlp_spec,
+    norm_spec,
+    pad_heads,
+)
+from repro.models.ptree import ts
+from repro.sharding.axes import shard
+
+
+@dataclass(frozen=True)
+class ParallelPlan:
+    """Parallelism + analysis knobs, orthogonal to the arch config."""
+
+    model_axis: int = 1
+    data_axis: int = 1  # used by grouped MoE dispatch (hillclimb)
+    attn_mode: str = "tp"  # tp | sp (sequence-parallel attention)
+    pad_attention_heads: bool = True
+    mla_absorb: bool = False  # absorbed MLA decode (beyond-paper opt)
+    analysis_unroll: bool = False
+    remat: bool = True
+    attn_chunk: int = 0  # >0: blockwise attention for prefill/train
+    kv_cache_dtype: str = "bf16"  # bf16 | int8 (quantized KV, beyond-paper opt)
+    fused_unembed_loss: bool = False  # vocab-chunked softmax-xent (hillclimb)
+    fuse_qkv: bool = False  # single stacked QKV projection (hillclimb; MHA only)
+    moe_grouped_dispatch: bool = False  # per-data-shard MoE dispatch (hillclimb)
+    kv_scale_fold: bool = False  # fold int8 KV scales into scores/probs (hillclimb)
+
+
+def effective_heads(cfg: LMConfig, plan: ParallelPlan) -> tuple[int, int]:
+    """(q_heads, kv_heads) after optional padding to the model axis."""
+    if plan.attn_mode != "tp" or not plan.pad_attention_heads:
+        return cfg.n_heads, cfg.n_kv_heads
+    h = pad_heads(cfg.n_heads, plan.model_axis)
+    kh = cfg.n_kv_heads
+    if kh == cfg.n_heads:  # MHA: pad kv with q
+        kh = h
+    elif plan.model_axis % kh == 0 or kh % plan.model_axis == 0:
+        pass  # divisible or replicated-by-rules
+    return h, kh
+
+
+# --------------------------------------------------------------------------- #
+# Param specs
+# --------------------------------------------------------------------------- #
+
+
+def _attn_spec(cfg: LMConfig, plan: ParallelPlan) -> dict:
+    d = cfg.d_model
+    if cfg.use_mla:
+        qk_head = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+        spec = {
+            "w_dkv": ts((d, "embed"), (cfg.kv_lora_rank + cfg.qk_rope_head_dim, "kv_lora")),
+            "w_uk": ts((cfg.kv_lora_rank, "kv_lora"), (cfg.n_heads, "q_heads"), (cfg.qk_nope_head_dim, "head_dim")),
+            "w_uv": ts((cfg.kv_lora_rank, "kv_lora"), (cfg.n_heads, "q_heads"), (cfg.v_head_dim, "head_dim")),
+            "wo": ts((cfg.n_heads, "q_heads"), (cfg.v_head_dim, "head_dim"), (d, "embed")),
+            "kv_norm": norm_spec(cfg.kv_lora_rank, "rmsnorm"),
+        }
+        if cfg.q_lora_rank:
+            spec["w_dq"] = ts((d, "embed"), (cfg.q_lora_rank, "kv_lora"))
+            spec["w_uq"] = ts((cfg.q_lora_rank, "kv_lora"), (cfg.n_heads, "q_heads"), (qk_head, "head_dim"))
+            spec["q_norm"] = norm_spec(cfg.q_lora_rank, "rmsnorm")
+        else:
+            spec["wq"] = ts((d, "embed"), (cfg.n_heads, "q_heads"), (qk_head, "head_dim"))
+        return spec
+    h, kh = effective_heads(cfg, plan)
+    if plan.fuse_qkv and kh == h:
+        # single stacked projection: one residual all-gather, one MXU dot
+        spec = {
+            "wqkv": ts((3, "stack"), (d, "embed"), (h, "q_heads"), (cfg.d_head, "head_dim")),
+            "wo": ts((h, "q_heads"), (cfg.d_head, "head_dim"), (d, "embed"), init="fan_in", fan_in=h * cfg.d_head),
+        }
+        if cfg.qkv_bias:
+            spec["bqkv"] = ts((3, "stack"), (h, "q_heads"), (cfg.d_head, "head_dim"), init="zeros")
+        return spec
+    spec = {
+        "wq": ts((d, "embed"), (h, "q_heads"), (cfg.d_head, "head_dim")),
+        "wk": ts((d, "embed"), (kh, "kv_heads"), (cfg.d_head, "head_dim")),
+        "wv": ts((d, "embed"), (kh, "kv_heads"), (cfg.d_head, "head_dim")),
+        "wo": ts((h, "q_heads"), (cfg.d_head, "head_dim"), (d, "embed"), init="fan_in", fan_in=h * cfg.d_head),
+    }
+    if cfg.qkv_bias:
+        spec["bq"] = ts((h, "q_heads"), (cfg.d_head, "head_dim"), init="zeros")
+        spec["bk"] = ts((kh, "kv_heads"), (cfg.d_head, "head_dim"), init="zeros")
+        spec["bv"] = ts((kh, "kv_heads"), (cfg.d_head, "head_dim"), init="zeros")
+    return spec
+
+
+def _layer_spec(cfg: LMConfig, plan: ParallelPlan, layer_idx: int) -> dict:
+    spec = {
+        "ln1": norm_spec(cfg.d_model, cfg.norm),
+        "attn": _attn_spec(cfg, plan),
+        "ln2": norm_spec(cfg.d_model, cfg.norm),
+    }
+    if cfg.moe is not None and layer_idx >= cfg.moe.first_k_dense:
+        spec["moe"] = moe_lib.moe_spec(cfg.d_model, cfg.moe, cfg.ffn_act)
+    else:
+        ff = (cfg.moe.first_dense_ff or cfg.d_ff) if cfg.moe is not None else cfg.d_ff
+        spec["mlp"] = mlp_spec(cfg.d_model, ff, cfg.ffn_act)
+    return spec
+
+
+def _stack_specs(specs: list) -> dict:
+    """Stack homogeneous per-layer spec trees along a leading 'layers' dim."""
+    import jax.tree_util as jtu
+    from repro.models.ptree import TensorSpec
+
+    def stack(*leaves: TensorSpec):
+        l0 = leaves[0]
+        return TensorSpec(
+            (len(leaves),) + l0.shape,
+            ("layers",) + l0.axes,
+            dtype=l0.dtype,
+            init=l0.init,
+            init_scale=l0.init_scale,
+            fan_in=l0.fan_in or (int(np.prod(l0.shape[:-1])) if len(l0.shape) > 1 else l0.shape[0]),
+        )
+
+    return jax.tree.map(stack, *specs, is_leaf=lambda x: isinstance(x, TensorSpec))
+
+
+def lm_param_spec(cfg: LMConfig, plan: ParallelPlan) -> dict:
+    per_layer = [_layer_spec(cfg, plan, i) for i in range(cfg.n_layers)]
+    if cfg.moe is not None and cfg.moe.first_k_dense:
+        k = cfg.moe.first_k_dense
+        layers = {"dense": _stack_specs(per_layer[:k]), "moe": _stack_specs(per_layer[k:])}
+    else:
+        layers = {"all": _stack_specs(per_layer)}
+    spec = {
+        # table sharded on d_model (not vocab): the token gather is then
+        # shard-local; vocab-sharding would make GSPMD replicate the full
+        # f32 table per chip (measured 3 x 2 GB in the buffer dump).
+        "embed": ts((cfg.vocab_size, None), (cfg.d_model, "embed_tbl"), scale=1.0, fan_in=cfg.d_model),
+        "layers": layers,
+        "final_norm": norm_spec(cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        spec["unembed"] = ts((cfg.d_model, "embed"), (cfg.vocab_size, "vocab"))
+    return spec
+
+
+# --------------------------------------------------------------------------- #
+# Attention application
+# --------------------------------------------------------------------------- #
+
+
+def _gqa_qkv(p, x, cfg: LMConfig, positions):
+    if "wqkv" in p:
+        qkv = jnp.einsum("bsd,cdhk->cbshk", x, p["wqkv"])
+        if "bqkv" in p:
+            qkv = qkv + p["bqkv"][:, None, None]
+        q, k, v = qkv[0], qkv[1], qkv[2]
+        rot = int(cfg.d_head * cfg.rope_pct)
+        q = apply_rope(q, positions, cfg.rope_theta, rot)
+        k = apply_rope(k, positions, cfg.rope_theta, rot)
+        return q, k, v
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    # heads_act shards divisible head counts; head_dim_act (hillclimb rule)
+    # shards the kv projection over head_dim when kv_heads < model axis,
+    # avoiding a replicated kv matmul on every model shard.
+    q = shard(q, "batch", None, "heads_act", "head_dim_act")
+    k = shard(k, "batch", None, "heads_act", "head_dim_act")
+    v = shard(v, "batch", None, "heads_act", "head_dim_act")
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    rot = int(cfg.d_head * cfg.rope_pct)
+    q = apply_rope(q, positions, cfg.rope_theta, rot)
+    k = apply_rope(k, positions, cfg.rope_theta, rot)
+    return q, k, v
+
+
+def _mla_qkv(p, x, cfg: LMConfig, positions):
+    """Returns q (nope+rope), latent cache pieces, and expanded k/v."""
+    if cfg.q_lora_rank:
+        cq = apply_norm(p["q_norm"], jnp.einsum("bsd,dr->bsr", x, p["w_dq"]), "rmsnorm")
+        q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = q[..., : cfg.qk_nope_head_dim], q[..., cfg.qk_nope_head_dim :]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta, cfg.qk_rope_head_dim)
+
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"])
+    ckv, k_rope = ckv_full[..., : cfg.kv_lora_rank], ckv_full[..., cfg.kv_lora_rank :]
+    ckv = apply_norm(p["kv_norm"], ckv, "rmsnorm")
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta, cfg.qk_rope_head_dim)[:, :, 0, :]
+    return q_nope, q_rope, ckv, k_rope
+
+
+def _mla_expand(p, ckv, k_rope, n_heads):
+    k_nope = jnp.einsum("bsr,rhk->bshk", ckv, p["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", ckv, p["w_uv"])
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :], k_nope.shape[:2] + (n_heads, k_rope.shape[-1]))
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    return k, v
+
+
+def _self_attention(p, x, cfg: LMConfig, plan: ParallelPlan, positions, kind: str):
+    """Full-sequence causal self-attention (train / prefill). Returns
+    (attn_out_pre_wo @ wo, cache_pieces)."""
+    B, S, _ = x.shape
+    if cfg.use_mla:
+        q_nope, q_rope, ckv, k_rope = _mla_qkv(p, x, cfg, positions)
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k, v = _mla_expand(p, ckv, k_rope, cfg.n_heads)
+        scale = 1.0 / np.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+        cache = {"ckv": ckv, "k_rope": k_rope}
+    else:
+        q, k, v = _gqa_qkv(p, x, cfg, positions)
+        k_e, v_e = _expand_kv(k, q.shape[2]), _expand_kv(v, q.shape[2])
+        scale = None
+        cache = {"k": k, "v": v}
+        k, v = k_e, v_e
+    if plan.attn_chunk and S > 2 * plan.attn_chunk:
+        out = attention_blockwise(
+            q, k, v, causal=True, chunk=plan.attn_chunk,
+            unroll=plan.analysis_unroll, sp=(plan.attn_mode == "sp"),
+        )
+    else:
+        out = attention_core(q, k, v, causal=True, softmax_scale=scale, mode=plan.attn_mode)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache
+
+
+def _quantize_slot(x):
+    """Per-token int8 quantization of one new cache entry (B,1,...)."""
+    amax = jnp.max(jnp.abs(x.astype(F32)), axis=tuple(range(2, x.ndim)), keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(F32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def _cache_write(cache, name, new_bf16, idx, *, layer=None):
+    """Write one token's K/V at ``idx``. With ``layer`` given, the write goes
+    directly into the *stacked* cache (a slot-sized dynamic_update_slice —
+    alias-friendly under donation; full-slice write-backs defeat XLA's
+    in-place buffer reuse, measured +50 GiB on qwen decode)."""
+    def dus(buf, upd, ix):
+        if layer is not None:
+            return jax.lax.dynamic_update_slice(buf, upd[None], (layer,) + ix)
+        return jax.lax.dynamic_update_slice(buf, upd, ix)
+
+    if name + "_scale" in cache:
+        q, s = _quantize_slot(new_bf16)
+        c = dus(cache[name], q, idx)
+        sc = dus(cache[name + "_scale"], s, idx)
+        return {name: c, name + "_scale": sc}
+    c = dus(cache[name], new_bf16.astype(cache[name].dtype), idx)
+    return {name: c}
+
+
+def _cache_read(cache_l, name):
+    """bf16 view of one cache leaf (dequantize if int8)."""
+    x = cache_l[name]
+    if name + "_scale" in cache_l:
+        s = cache_l[name + "_scale"].astype(F32)
+        s = s.reshape(s.shape + (1,) * (x.ndim - s.ndim))
+        return (x.astype(F32) * s).astype(jnp.bfloat16)
+    return x.astype(jnp.bfloat16)
+
+
+def _gqa_decode_attention(q, k, v):
+    """Grouped GQA decode attention without expanding K/V to q-heads:
+    q (B,1,H,D), k/v (B,S,KH,D) -> (B,1,H,D). Softmax over the (possibly
+    seq-sharded) cache axis in f32."""
+    B, T, H, Dh = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    qg = q.reshape(B, T, KH, G, Dh)
+    scores = jnp.einsum("btkgd,bskd->bkgts", qg, k).astype(F32) / np.sqrt(Dh)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgts,bskd->btkgd", probs, v)
+    return out.reshape(B, T, H, Dh)
+
+
+def _decode_attention(p, x, cfg: LMConfig, plan: ParallelPlan, cache, pos: int, layer: int):
+    """One-token attention against a fixed-length cache (len S, ring slot
+    ``pos % S``). ``cache`` is the full stacked (possibly int8+scale) cache;
+    this layer's slot is written in place, then its slice is read.
+    Returns (out, updated stacked cache)."""
+    B = x.shape[0]
+    positions = jnp.full((1,), pos, jnp.int32)
+
+    def read(c, name):
+        sl = {k: jax.lax.index_in_dim(v, layer, 0, keepdims=False) for k, v in c.items() if k in (name, name + "_scale")}
+        return _cache_read(sl, name)
+
+    if cfg.use_mla:
+        q_nope, q_rope, ckv_new, k_rope_new = _mla_qkv(p, x, cfg, positions)
+        S = cache["ckv"].shape[2]
+        slot = pos % S
+        new_cache = dict(cache)
+        new_cache.update(_cache_write(cache, "ckv", ckv_new, (0, slot, 0), layer=layer))
+        new_cache.update(_cache_write(new_cache, "k_rope", k_rope_new, (0, slot, 0), layer=layer))
+        ckv = shard(read(new_cache, "ckv"), "batch", "kv_seq", None)
+        k_rope = shard(read(new_cache, "k_rope"), "batch", "kv_seq", None)
+        scale = 1.0 / np.sqrt(cfg.qk_nope_head_dim + cfg.qk_rope_head_dim)
+        if plan.mla_absorb:
+            # Absorbed decode: score in latent space — never expand K/V to heads.
+            q_lat = jnp.einsum("bthk,rhk->bthr", q_nope, p["w_uk"])  # (B,1,H,r)
+            s_lat = jnp.einsum("bthr,bsr->bths", q_lat, ckv.astype(q_lat.dtype))
+            s_rope = jnp.einsum("bthk,bsk->bths", q_rope, k_rope.astype(q_rope.dtype))
+            scores = (s_lat + s_rope).astype(F32) * scale
+            probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+            o_lat = jnp.einsum("bths,bsr->bthr", probs, ckv.astype(probs.dtype))
+            out = jnp.einsum("bthr,rhk->bthk", o_lat, p["w_uv"])
+        else:
+            k, v = _mla_expand(p, ckv.astype(x.dtype), k_rope.astype(x.dtype), cfg.n_heads)
+            q = jnp.concatenate([q_nope, q_rope], axis=-1)
+            out = attention_core(q, k, v, causal=False, softmax_scale=scale, mode="decode")
+    else:
+        q, k_new, v_new = _gqa_qkv(p, x, cfg, positions)
+        S = cache["k"].shape[2]
+        slot = pos % S
+        new_cache = dict(cache)
+        new_cache.update(_cache_write(cache, "k", k_new, (0, slot, 0, 0), layer=layer))
+        new_cache.update(_cache_write(new_cache, "v", v_new, (0, slot, 0, 0), layer=layer))
+        if plan.kv_scale_fold and "k_scale" in new_cache:
+            # fold per-token int8 scales into scores/probs: the cache is cast
+            # int8->bf16 once, never materialized in f32 (hillclimb; §Perf).
+            H, Dh = q.shape[2], q.shape[3]
+            kq = shard(new_cache["k"][layer], "batch", "kv_seq", None, None)
+            vq = shard(new_cache["v"][layer], "batch", "kv_seq", None, None)
+            ks = new_cache["k_scale"][layer][:, :, 0, 0].astype(F32)  # (B, S)
+            vs = new_cache["v_scale"][layer][:, :, 0, 0].astype(F32)
+            kq_e = _expand_kv(kq.astype(x.dtype), H)
+            vq_e = _expand_kv(vq.astype(x.dtype), H)
+            scores = jnp.einsum("bqhd,bshd->bhqs", q, kq_e).astype(F32)
+            scores = scores * ks[:, None, None, :] / np.sqrt(Dh)
+            probs = jax.nn.softmax(scores, axis=-1)
+            probs_f = (probs * vs[:, None, None, :]).astype(x.dtype)
+            out = jnp.einsum("bhqs,bshd->bqhd", probs_f, vq_e)
+        else:
+            # grouped GQA attention: never materializes K/V at q-head width
+            # (expanding 8 kv heads to 56 cost stablelm/arctic decode ~10x
+            # their cache size in temps — dry-run buffer dumps).
+            k_s = shard(read(new_cache, "k"), "batch", "kv_seq", None, None).astype(x.dtype)
+            v_s = shard(read(new_cache, "v"), "batch", "kv_seq", None, None).astype(x.dtype)
+            q = shard(q, "batch", None, None, None)
+            out = _gqa_decode_attention(q, k_s, v_s)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+
+# --------------------------------------------------------------------------- #
+# Layer body + iteration
+# --------------------------------------------------------------------------- #
+
+
+def _layer_fwd(p, x, cfg, plan, positions, kind):
+    h = apply_norm(p["ln1"], x, cfg.norm)
+    attn_out, cache = _self_attention(p["attn"], h, cfg, plan, positions, kind)
+    x = x + attn_out
+    h = apply_norm(p["ln2"], x, cfg.norm)
+    if "moe" in p:
+        groups = plan.data_axis if plan.moe_grouped_dispatch else 1
+        ff, aux = moe_lib.apply_moe(p["moe"], h, cfg.moe, cfg.ffn_act, groups=groups)
+    else:
+        ff, aux = apply_mlp(p["mlp"], h, cfg.ffn_act), jnp.zeros((), F32)
+    x = x + ff
+    x = shard(x, "batch", "seq_res", None)  # Megatron-SP residual stream
+    return x, aux, cache
+
+
+def _iterate_layers(params, x, cfg: LMConfig, plan: ParallelPlan, positions, kind: str, collect_cache: bool):
+    """Run all layers; returns (x, total_aux, caches list-or-None)."""
+    groups = params["layers"]
+    total_aux = jnp.zeros((), F32)
+    caches = []
+
+    def run_group(x, total_aux, stacked, n):
+        nonlocal caches
+        body = lambda p, x: _layer_fwd(p, x, cfg, plan, positions, kind)
+        if plan.analysis_unroll:
+            for i in range(n):
+                p_i = jax.tree.map(lambda a: a[i], stacked)
+                fn = jax.checkpoint(body) if (plan.remat and kind == "train") else body
+                x, aux, cache = fn(p_i, x)
+                total_aux = total_aux + aux
+                if collect_cache:
+                    caches.append(cache)
+        else:
+            def scan_body(carry, p_i):
+                x, acc = carry
+                fn = jax.checkpoint(body) if (plan.remat and kind == "train") else body
+                x, aux, cache = fn(p_i, x)
+                return (x, acc + aux), (cache if collect_cache else ())
+            (x, total_aux), ys = jax.lax.scan(scan_body, (x, total_aux), stacked)
+            if collect_cache:
+                caches.append(ys)  # already stacked (n, ...) along dim 0
+        return x, total_aux
+
+    if "dense" in groups:
+        kd = groups["dense"]["ln1"]["scale"].shape[0]
+        x, total_aux = run_group(x, total_aux, groups["dense"], kd)
+        x, total_aux = run_group(x, total_aux, groups["moe"], cfg.n_layers - kd)
+    else:
+        x, total_aux = run_group(x, total_aux, groups["all"], cfg.n_layers)
+    return x, total_aux, (caches if collect_cache else None)
+
+
+# --------------------------------------------------------------------------- #
+# Entry points
+# --------------------------------------------------------------------------- #
+
+
+def _embed(params, tokens, cfg):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    return shard(x, "batch", "seq_res", None)
+
+
+def _unembed(params, x, cfg):
+    table = params.get("unembed")
+    if table is None:
+        table = params["embed"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, table.astype(x.dtype))
+    return shard(logits, "batch", None, "vocab_act")
+
+
+def lm_hidden(params, tokens, cfg: LMConfig, plan: ParallelPlan, *, final_norm: bool = True):
+    """(B,S) -> final hidden states (B,S,D) + MoE aux loss."""
+    B, S = tokens.shape
+    positions = jnp.arange(S)
+    x = _embed(params, tokens, cfg)
+    x, aux, _ = _iterate_layers(params, x, cfg, plan, positions, "train", collect_cache=False)
+    if final_norm:
+        x = apply_norm(params["final_norm"], x, cfg.norm)
+    return x, aux
+
+
+def lm_forward(params, tokens, cfg: LMConfig, plan: ParallelPlan):
+    """(B,S) int32 -> (B,S,V) logits (bf16, vocab-sharded)."""
+    x, aux = lm_hidden(params, tokens, cfg, plan)
+    return _unembed(params, x, cfg), aux
+
+
+def _xent_chunk(params, x_c, labels_c, cfg):
+    x_c = apply_norm(params["final_norm"], x_c, cfg.norm)  # f32 temps stay chunk-local
+    logits = _unembed(params, x_c, cfg).astype(F32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    # gold logit via fused iota-compare mask: shard-local over the vocab axis
+    # (take_along_axis on a vocab-sharded tensor would replicate full logits).
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    gold = jnp.sum(jnp.where(vocab_iota == labels_c[..., None], logits, 0.0), axis=-1)
+    return jnp.sum(lse - gold)
+
+
+def lm_loss(params, batch, cfg: LMConfig, plan: ParallelPlan):
+    """batch = {tokens (B,S), labels (B,S)}; mean xent + MoE aux.
+
+    The unembed+softmax runs in sequence chunks under jax.checkpoint: full
+    (B,S,V) f32 logits never materialize (26 GB/chip for qwen otherwise).
+    Python loop, so dry-run cost analysis stays exact.
+    """
+    x, aux = lm_hidden(params, batch["tokens"], cfg, plan, final_norm=False)
+    B, S, _ = x.shape
+    n_chunks = max(S // 2048, 1) if S >= 4096 else 1
+    cs = S // n_chunks
+    total = jnp.zeros((), F32)
+    for i in range(n_chunks):
+        x_c = x[:, i * cs : (i + 1) * cs]
+        l_c = batch["labels"][:, i * cs : (i + 1) * cs]
+        total = total + jax.checkpoint(_xent_chunk, static_argnums=(3,))(params, x_c, l_c, cfg)
+    return total / (B * S) + aux
+
+
+def lm_prefill(params, tokens, cfg: LMConfig, plan: ParallelPlan):
+    """(B,S) -> (last-token logits (B,V), stacked KV cache)."""
+    B, S = tokens.shape
+    positions = jnp.arange(S)
+    x = _embed(params, tokens, cfg)
+    x, _, caches = _iterate_layers(params, x, cfg, plan, positions, "prefill", collect_cache=True)
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = _unembed(params, x[:, -1:, :], cfg)[:, 0]
+    if plan.analysis_unroll:
+        cache = jax.tree.map(lambda *ls: jnp.stack(ls), *caches)
+    else:
+        # scan path: one pre-stacked tree per layer group; concat groups
+        cache = caches[0] if len(caches) == 1 else jax.tree.map(
+            lambda *gs: jnp.concatenate(gs, axis=0), *caches
+        )
+    cache = _shard_cache(_quantize_cache(cache, plan), cfg)
+    return logits, cache
+
+
+def cache_spec(cfg: LMConfig, plan: ParallelPlan, batch: int, seq: int) -> dict:
+    """ShapeDtypeStructs for a decode KV cache of length ``seq``."""
+    dt = jnp.int8 if plan.kv_cache_dtype == "int8" else jnp.bfloat16
+    L = cfg.n_layers
+    if cfg.use_mla:
+        out = {
+            "ckv": jax.ShapeDtypeStruct((L, batch, seq, cfg.kv_lora_rank), dt),
+            "k_rope": jax.ShapeDtypeStruct((L, batch, seq, cfg.qk_rope_head_dim), dt),
+        }
+    else:
+        _, kh = effective_heads(cfg, plan)
+        out = {
+            "k": jax.ShapeDtypeStruct((L, batch, seq, kh, cfg.d_head), dt),
+            "v": jax.ShapeDtypeStruct((L, batch, seq, kh, cfg.d_head), dt),
+        }
+    if plan.kv_cache_dtype == "int8":
+        for name in list(out):
+            s = out[name].shape
+            out[name + "_scale"] = jax.ShapeDtypeStruct(s[:3] + (1,) * (len(s) - 3), jnp.bfloat16)
+    return out
+
+
+def _quantize_cache(cache, plan):
+    if plan.kv_cache_dtype != "int8":
+        return cache
+    out = {}
+    for name, x in cache.items():
+        amax = jnp.max(jnp.abs(x.astype(F32)), axis=tuple(range(3, x.ndim)), keepdims=True)
+        scale = jnp.maximum(amax, 1e-6) / 127.0
+        out[name] = jnp.clip(jnp.round(x.astype(F32) / scale), -127, 127).astype(jnp.int8)
+        out[name + "_scale"] = scale.astype(jnp.bfloat16)
+    return out
+
+
+def _dequantize_cache(cache):
+    if not any(k.endswith("_scale") for k in cache):
+        return cache
+    return {
+        k: (cache[k].astype(F32) * cache[k + "_scale"].astype(F32)).astype(jnp.bfloat16)
+        for k in cache
+        if not k.endswith("_scale")
+    }
+
+
+def _shard_cache(cache, cfg):
+    def s(name, x):
+        if x.ndim == 4:  # (L,B,S,r)
+            return shard(x, None, "batch", "kv_seq", None)
+        return shard(x, None, "batch", "kv_seq", None, None)
+    return {k: s(k, v) for k, v in cache.items()}
+
+
+def lm_decode(params, cache, token, pos, cfg: LMConfig, plan: ParallelPlan):
+    """One decode step. token: (B,) int32, pos: python int (static slot).
+
+    cache leaves are stacked over layers (dim0). int8 caches are dequantized
+    per layer on the fly (scales kept alongside); the new token's K/V is
+    written back in the cache dtype.
+    """
+    B = token.shape[0]
+    x = _embed(params, token[:, None], cfg)
+
+    groups = params["layers"]
+    stacked_list = []
+    if "dense" in groups:
+        kd = groups["dense"]["ln1"]["scale"].shape[0]
+        for i in range(kd):
+            stacked_list.append(jax.tree.map(lambda a: a[i], groups["dense"]))
+        for i in range(cfg.n_layers - kd):
+            stacked_list.append(jax.tree.map(lambda a: a[i], groups["moe"]))
+    else:
+        for i in range(cfg.n_layers):
+            stacked_list.append(jax.tree.map(lambda a: a[i], groups["all"]))
+
+    # in-place stacked-cache updates: each layer writes only the new token's
+    # slot into the donated stacked cache (slot-sized dynamic_update_slice),
+    # then reads its own slice — no per-layer restack copies.
+    for i, p_l in enumerate(stacked_list):
+        h = apply_norm(p_l["ln1"], x, cfg.norm)
+        attn_out, cache = _decode_attention(p_l["attn"], h, cfg, plan, cache, pos, i)
+        x = x + attn_out
+        h = apply_norm(p_l["ln2"], x, cfg.norm)
+        if "moe" in p_l:
+            ff, _ = moe_lib.apply_moe(p_l["moe"], h, cfg.moe, cfg.ffn_act)
+        else:
+            ff = apply_mlp(p_l["mlp"], h, cfg.ffn_act)
+        x = x + ff
+
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    logits = _unembed(params, x, cfg)[:, 0]
+    cache = {k: shard(v, *((None,) + ("batch", "kv_seq") + (None,) * (v.ndim - 3))) for k, v in cache.items()}
+    return logits, cache

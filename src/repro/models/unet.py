@@ -1,0 +1,257 @@
+"""SDXL-class UNet: ResBlocks + spatial transformers (self+cross attention).
+[arXiv:2307.01952]
+
+Assignment config: ch=320, ch_mult=(1,2,4), 2 res blocks/stage,
+transformer_depth=(1,2,10), ctx_dim=2048, latent 128 for 1024px images.
+
+Sharding: conv/GN channels over `model` (TP), batch over `data` (or spatial
+rows for tiny-batch gen shapes — rules decided by the launcher), attention in
+SP mode (tokens over `model`).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import UNetConfig
+from repro.models.layers import F32, attention_core, sinusoidal_embedding
+from repro.models.ptree import ts
+from repro.sharding.axes import shard
+
+GN_GROUPS = 32
+
+
+# ------------------------------ primitives --------------------------------- #
+
+
+def _gn_spec(c):
+    return {"scale": ts((c, "conv_out"), dtype=F32, init="ones"), "bias": ts((c, "conv_out"), dtype=F32, init="zeros")}
+
+
+def apply_gn(p, x, groups=GN_GROUPS, eps=1e-5):
+    B, H, W, C = x.shape
+    g = min(groups, C)
+    xf = x.astype(F32).reshape(B, H, W, g, C // g)
+    mu = xf.mean((1, 2, 4), keepdims=True)
+    var = jnp.square(xf - mu).mean((1, 2, 4), keepdims=True)
+    xf = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (xf.reshape(B, H, W, C) * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def _conv_spec(cin, cout, k=3):
+    return {"w": ts((k, None), (k, None), (cin, "conv_in"), (cout, "conv_out"), fan_in=k * k * cin), "b": ts((cout, "conv_out"), init="zeros")}
+
+
+def _conv(p, x, stride=1):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"].astype(x.dtype), (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+    return y + p["b"].astype(x.dtype)
+
+
+def _lin_spec(cin, cout, axes=("embed", "mlp"), init="fan_in"):
+    return {"w": ts((cin, axes[0]), (cout, axes[1]), init=init), "b": ts((cout, axes[1]), init="zeros")}
+
+
+def _lin(p, x):
+    return jnp.einsum("...d,de->...e", x, p["w"]) + p["b"]
+
+
+def _silu(x):
+    return jax.nn.silu(x.astype(F32)).astype(x.dtype)
+
+
+# ------------------------------ res block ---------------------------------- #
+
+
+def _res_spec(cin, cout, t_dim):
+    spec = {
+        "gn1": _gn_spec(cin),
+        "c1": _conv_spec(cin, cout),
+        "temb": _lin_spec(t_dim, cout, axes=("embed", "conv_out")),
+        "gn2": _gn_spec(cout),
+        "c2": _conv_spec(cout, cout),
+    }
+    if cin != cout:
+        spec["skip"] = _conv_spec(cin, cout, k=1)
+    return spec
+
+
+def _res_block(p, x, temb):
+    h = _conv(p["c1"], _silu(apply_gn(p["gn1"], x)))
+    h = h + _lin(p["temb"], _silu(temb))[:, None, None, :]
+    h = _conv(p["c2"], _silu(apply_gn(p["gn2"], h)))
+    skip = _conv(p["skip"], x) if "skip" in p else x
+    return skip + h
+
+
+# -------------------------- spatial transformer ----------------------------- #
+
+
+def _tf_block_spec(ch, ctx_dim, head_dim):
+    n_heads = max(ch // head_dim, 1)
+    return {
+        "ln1": _ln_spec(ch),
+        "self_q": ts((ch, "embed"), (n_heads, "q_heads"), (head_dim, "head_dim")),
+        "self_k": ts((ch, "embed"), (n_heads, "q_heads"), (head_dim, "head_dim")),
+        "self_v": ts((ch, "embed"), (n_heads, "q_heads"), (head_dim, "head_dim")),
+        "self_o": ts((n_heads, "q_heads"), (head_dim, "head_dim"), (ch, "embed")),
+        "ln2": _ln_spec(ch),
+        "cross_q": ts((ch, "embed"), (n_heads, "q_heads"), (head_dim, "head_dim")),
+        "cross_k": ts((ctx_dim, "ctx"), (n_heads, "q_heads"), (head_dim, "head_dim")),
+        "cross_v": ts((ctx_dim, "ctx"), (n_heads, "q_heads"), (head_dim, "head_dim")),
+        "cross_o": ts((n_heads, "q_heads"), (head_dim, "head_dim"), (ch, "embed")),
+        "ln3": _ln_spec(ch),
+        "ff_g": _lin_spec(ch, 4 * ch),
+        "ff_u": _lin_spec(ch, 4 * ch),
+        "ff_o": _lin_spec(4 * ch, ch, axes=("mlp", "embed")),
+    }
+
+
+def _ln_spec(c):
+    return {"scale": ts((c, "embed"), dtype=F32, init="ones"), "bias": ts((c, "embed"), dtype=F32, init="zeros")}
+
+
+def _ln(p, x, eps=1e-5):
+    xf = x.astype(F32)
+    mu = xf.mean(-1, keepdims=True)
+    var = jnp.square(xf - mu).mean(-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def _tf_block(p, x, ctx):
+    """x: (B,T,C); ctx: (B,Tc,ctx_dim)."""
+    h = _ln(p["ln1"], x)
+    q = jnp.einsum("btd,dhk->bthk", h, p["self_q"])
+    k = jnp.einsum("btd,dhk->bthk", h, p["self_k"])
+    v = jnp.einsum("btd,dhk->bthk", h, p["self_v"])
+    a = attention_core(q, k, v, causal=False, mode="sp")
+    x = x + jnp.einsum("bthk,hkd->btd", a, p["self_o"])
+
+    h = _ln(p["ln2"], x)
+    q = jnp.einsum("btd,dhk->bthk", h, p["cross_q"])
+    k = jnp.einsum("bcd,dhk->bchk", ctx, p["cross_k"])
+    v = jnp.einsum("bcd,dhk->bchk", ctx, p["cross_v"])
+    a = attention_core(q, k, v, causal=False, mode="sp")
+    x = x + jnp.einsum("bthk,hkd->btd", a, p["cross_o"])
+
+    h = _ln(p["ln3"], x)
+    g = _lin(p["ff_g"], h)
+    g = shard(g, "batch", None, "mlp_act")
+    h = _silu(g) * _lin(p["ff_u"], h)
+    return x + _lin(p["ff_o"], h)
+
+
+def _spatial_tf_spec(ch, depth, ctx_dim, head_dim):
+    return {
+        "gn": _gn_spec(ch),
+        "proj_in": _lin_spec(ch, ch, axes=("conv_in", "embed")),
+        "blocks": {f"b{i}": _tf_block_spec(ch, ctx_dim, head_dim) for i in range(depth)},
+        "proj_out": _lin_spec(ch, ch, axes=("embed", "conv_out"), init="zeros"),
+    }
+
+
+def _spatial_tf(p, x, ctx):
+    B, H, W, C = x.shape
+    h = apply_gn(p["gn"], x)
+    h = _lin(p["proj_in"], h.reshape(B, H * W, C))
+    for name in sorted(p["blocks"], key=lambda s: int(s[1:])):
+        h = _tf_block(p["blocks"][name], h, ctx)
+    return x + _lin(p["proj_out"], h).reshape(B, H, W, C)
+
+
+# ------------------------------ full UNet ---------------------------------- #
+
+
+def unet_param_spec(cfg: UNetConfig) -> dict:
+    t_dim = 4 * cfg.ch
+    chans = [cfg.ch * m for m in cfg.ch_mult]
+    spec: dict = {
+        "temb": {"l1": _lin_spec(cfg.ch, t_dim), "l2": _lin_spec(t_dim, t_dim)},
+        "conv_in": _conv_spec(cfg.in_channels, cfg.ch),
+    }
+    down = {}
+    prev = cfg.ch
+    skips = [cfg.ch]
+    for i, ch in enumerate(chans):
+        blocks = {}
+        for b in range(cfg.n_res_blocks):
+            blk = {"res": _res_spec(prev, ch, t_dim)}
+            if cfg.transformer_depth[i]:
+                blk["tf"] = _spatial_tf_spec(ch, cfg.transformer_depth[i], cfg.ctx_dim, cfg.head_dim)
+            blocks[f"b{b}"] = blk
+            prev = ch
+            skips.append(ch)
+        if i < len(chans) - 1:
+            blocks["down"] = _conv_spec(ch, ch)
+            skips.append(ch)
+        down[f"stage{i}"] = blocks
+    spec["down"] = down
+    spec["mid"] = {
+        "res1": _res_spec(prev, prev, t_dim),
+        "tf": _spatial_tf_spec(prev, cfg.transformer_depth[-1], cfg.ctx_dim, cfg.head_dim),
+        "res2": _res_spec(prev, prev, t_dim),
+    }
+    up = {}
+    for i, ch in reversed(list(enumerate(chans))):
+        blocks = {}
+        for b in range(cfg.n_res_blocks + 1):
+            skip_ch = skips.pop()
+            blk = {"res": _res_spec(prev + skip_ch, ch, t_dim)}
+            if cfg.transformer_depth[i]:
+                blk["tf"] = _spatial_tf_spec(ch, cfg.transformer_depth[i], cfg.ctx_dim, cfg.head_dim)
+            blocks[f"b{b}"] = blk
+            prev = ch
+        if i > 0:
+            blocks["up"] = _conv_spec(ch, ch)
+        up[f"stage{i}"] = blocks
+    spec["up"] = up
+    spec["out"] = {"gn": _gn_spec(cfg.ch), "conv": _conv_spec(cfg.ch, cfg.in_channels)}
+    return spec
+
+
+def unet_forward(params, latents, t, ctx, cfg: UNetConfig, **_):
+    """latents: (B,h,w,4); t: (B,); ctx: (B, 77, ctx_dim) text conditioning."""
+    temb = sinusoidal_embedding(t, cfg.ch).astype(latents.dtype)
+    temb = _lin(params["temb"]["l2"], _silu(_lin(params["temb"]["l1"], temb)))
+
+    chans = [cfg.ch * m for m in cfg.ch_mult]
+    x = _conv(params["conv_in"], latents)
+    x = shard(x, "batch", "spatial", None, None)
+    skips = [x]
+    for i in range(len(chans)):
+        stage = params["down"][f"stage{i}"]
+        for b in range(cfg.n_res_blocks):
+            blk = stage[f"b{b}"]
+            x = _res_block(blk["res"], x, temb)
+            if "tf" in blk:
+                x = _spatial_tf(blk["tf"], x, ctx)
+            skips.append(x)
+        if f"down" in stage:
+            x = _conv(stage["down"], x, stride=2)
+            x = shard(x, "batch", "spatial", None, None)
+            skips.append(x)
+
+    m = params["mid"]
+    x = _res_block(m["res1"], x, temb)
+    x = _spatial_tf(m["tf"], x, ctx)
+    x = _res_block(m["res2"], x, temb)
+
+    for i in reversed(range(len(chans))):
+        stage = params["up"][f"stage{i}"]
+        for b in range(cfg.n_res_blocks + 1):
+            blk = stage[f"b{b}"]
+            x = jnp.concatenate([x, skips.pop()], axis=-1)
+            x = _res_block(blk["res"], x, temb)
+            if "tf" in blk:
+                x = _spatial_tf(blk["tf"], x, ctx)
+        if "up" in stage:
+            B, H, W, C = x.shape
+            x = jax.image.resize(x, (B, 2 * H, 2 * W, C), "nearest")
+            x = _conv(stage["up"], x)
+            x = shard(x, "batch", "spatial", None, None)
+
+    x = _silu(apply_gn(params["out"]["gn"], x))
+    return _conv(params["out"]["conv"], x)

@@ -1,0 +1,124 @@
+"""ViT / DeiT encoders. [arXiv:2010.11929, arXiv:2012.12877]
+
+DeiT adds a distillation token and a second classifier head; at inference
+the two head outputs are averaged (the paper's protocol).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ViTConfig
+from repro.models.layers import F32, apply_mlp, apply_norm, attention_core, mlp_spec, norm_spec
+from repro.models.ptree import ts
+from repro.sharding.axes import shard
+
+
+def _enc_layer_spec(d: int, n_heads: int, d_ff: int, d_head: int) -> dict:
+    return {
+        "ln1": norm_spec(d, "layernorm"),
+        "attn": {
+            "wqkv": ts((3, "stack"), (d, "embed"), (n_heads, "q_heads"), (d_head, "head_dim")),
+            "bqkv": ts((3, "stack"), (n_heads, "q_heads"), (d_head, "head_dim"), init="zeros"),
+            "wo": ts((n_heads, "q_heads"), (d_head, "head_dim"), (d, "embed")),
+            "bo": ts((d, "embed"), init="zeros"),
+        },
+        "ln2": norm_spec(d, "layernorm"),
+        "mlp": mlp_spec(d, d_ff, "gelu"),
+    }
+
+
+def encoder_layer(p, x, *, sp: bool = False):
+    d_head = p["attn"]["wqkv"].shape[-1]
+    h = apply_norm(p["ln1"], x, "layernorm")
+    qkv = jnp.einsum("bsd,cdhk->cbshk", h, p["attn"]["wqkv"]) + p["attn"]["bqkv"][:, None, None]
+    out = attention_core(qkv[0], qkv[1], qkv[2], causal=False, mode="sp" if sp else "tp")
+    x = x + jnp.einsum("bshk,hkd->bsd", out, p["attn"]["wo"]) + p["attn"]["bo"]
+    h = apply_norm(p["ln2"], x, "layernorm")
+    return x + apply_mlp(p["mlp"], h, "gelu")
+
+
+def vit_param_spec(cfg: ViTConfig) -> dict:
+    d = cfg.d_model
+    d_head = d // cfg.n_heads
+    n_tok = (cfg.img_res // cfg.patch) ** 2 + 1 + (1 if cfg.distill_token else 0)
+    spec = {
+        "patch_embed": {
+            "w": ts((cfg.patch * cfg.patch * 3, "conv_in"), (d, "embed")),
+            "b": ts((d, "embed"), init="zeros"),
+        },
+        "cls_token": ts((1, None), (1, None), (d, "embed"), init="zeros"),
+        "pos_embed": ts((1, None), (n_tok, None), (d, "embed"), scale=0.02, init="fan_in", fan_in=1),
+        "layers": {
+            "all": _stack([_enc_layer_spec(d, cfg.n_heads, cfg.d_ff, d_head) for _ in range(cfg.n_layers)])
+        },
+        "final_norm": norm_spec(d, "layernorm"),
+        "head": {"w": ts((d, "embed"), (cfg.n_classes, "classes")), "b": ts((cfg.n_classes, "classes"), init="zeros")},
+    }
+    if cfg.distill_token:
+        spec["dist_token"] = ts((1, None), (1, None), (d, "embed"), init="zeros")
+        spec["head_dist"] = {
+            "w": ts((d, "embed"), (cfg.n_classes, "classes")),
+            "b": ts((cfg.n_classes, "classes"), init="zeros"),
+        }
+    return spec
+
+
+def _stack(specs):
+    from repro.models.transformer import _stack_specs
+
+    return _stack_specs(specs)
+
+
+def patchify(images, patch: int):
+    """(B,H,W,3) -> (B, H/p * W/p, p*p*3)."""
+    B, H, W, C = images.shape
+    x = images.reshape(B, H // patch, patch, W // patch, patch, C)
+    x = x.transpose(0, 1, 3, 2, 4, 5).reshape(B, (H // patch) * (W // patch), patch * patch * C)
+    return x
+
+
+def vit_forward(params, images, cfg: ViTConfig, *, unroll: bool = False, interpolate_pos: bool = True):
+    """images: (B, R, R, 3) f32/bf16 -> logits (B, n_classes)."""
+    B = images.shape[0]
+    x = jnp.einsum("bsp,pd->bsd", patchify(images, cfg.patch).astype(params["patch_embed"]["w"].dtype),
+                   params["patch_embed"]["w"]) + params["patch_embed"]["b"]
+    x = shard(x, "batch", None, None)
+    n_special = 1 + (1 if cfg.distill_token else 0)
+    toks = [jnp.broadcast_to(params["cls_token"], (B, 1, x.shape[-1]))]
+    if cfg.distill_token:
+        toks.append(jnp.broadcast_to(params["dist_token"], (B, 1, x.shape[-1])))
+    x = jnp.concatenate(toks + [x], axis=1)
+    pos = params["pos_embed"]
+    if pos.shape[1] != x.shape[1] and interpolate_pos:
+        pos = _interp_pos(pos, n_special, x.shape[1])
+    x = x + pos
+
+    stacked = params["layers"]["all"]
+    n = cfg.n_layers
+    if unroll:
+        for i in range(n):
+            x = encoder_layer(jax.tree.map(lambda a: a[i], stacked), x)
+    else:
+        def body(x, p_i):
+            return encoder_layer(p_i, x), ()
+        x, _ = jax.lax.scan(body, x, stacked)
+    x = apply_norm(params["final_norm"], x, "layernorm")
+    logits = jnp.einsum("bd,dc->bc", x[:, 0], params["head"]["w"]) + params["head"]["b"]
+    if cfg.distill_token:
+        l2 = jnp.einsum("bd,dc->bc", x[:, 1], params["head_dist"]["w"]) + params["head_dist"]["b"]
+        logits = (logits + l2) / 2
+    return logits.astype(F32)
+
+
+def _interp_pos(pos, n_special: int, n_tok_new: int):
+    """Bilinear-resize the grid part of a position embedding (cls_384)."""
+    import math
+
+    special, grid = pos[:, :n_special], pos[:, n_special:]
+    g_old = int(math.isqrt(grid.shape[1]))
+    g_new = int(math.isqrt(n_tok_new - n_special))
+    d = grid.shape[-1]
+    grid2 = grid.reshape(1, g_old, g_old, d)
+    grid2 = jax.image.resize(grid2.astype(F32), (1, g_new, g_new, d), "bilinear").astype(grid.dtype)
+    return jnp.concatenate([special, grid2.reshape(1, g_new * g_new, d)], axis=1)

@@ -1,0 +1,110 @@
+"""Post-training quantization: the "NPU" substrate (DESIGN.md §2).
+
+Two uses:
+  * ``qdq_tree``   — quantize->dequantize round trip: injects exactly the
+                     precision error of the fast tier while keeping plain
+                     arrays, so any model runs "as if on the NPU" on CPU.
+                     (On TPU the real int8 path is kernels/int8_matmul.)
+  * ``quantize_tree`` — true int8 storage (values + per-channel scales) for
+                     the serving fast tier and the int8 kernel path.
+Weight-only by default (W8); ``fp16_tree`` reproduces the paper's FP16-NPU.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+F32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class QTensor:
+    values: Any  # int8
+    scale: Any  # f32, broadcastable to values
+
+    def dequantize(self, dtype=jnp.bfloat16):
+        return (self.values.astype(F32) * self.scale).astype(dtype)
+
+
+jax.tree_util.register_pytree_node(
+    QTensor, lambda q: ((q.values, q.scale), None), lambda _, ch: QTensor(*ch)
+)
+
+
+def quantize_tensor(w, *, axis=-1, bits: int = 8) -> QTensor:
+    """Symmetric quantization: per-channel along ``axis``, or per-tensor
+    (``axis=None`` — the crude NPU-compiler regime; much larger error)."""
+    qmax = 2 ** (bits - 1) - 1
+    if axis is None:
+        amax = jnp.max(jnp.abs(w.astype(F32)), keepdims=True)
+    else:
+        amax = jnp.max(jnp.abs(w.astype(F32)), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / qmax
+    q = jnp.clip(jnp.round(w.astype(F32) / scale), -qmax, qmax).astype(jnp.int8)
+    return QTensor(q, scale)
+
+
+def _is_weight(path: tuple, x) -> bool:
+    """Quantize matmul/conv weights; keep norms, biases, tables in fp."""
+    if not hasattr(x, "ndim") or x.ndim < 2:
+        return False
+    name = str(path[-1]) if path else ""
+    if any(s in name for s in ("scale", "bias", "norm", "pos_embed", "cls", "rel_bias")):
+        return False
+    return x.size >= 64
+
+
+def qdq_tree(params, *, bits: int = 8, axis: int = -1):
+    """Quantization-error injection (QDQ). Same tree structure/dtypes."""
+
+    def f(path, x):
+        if _is_weight(path, x):
+            return quantize_tensor(x, axis=axis, bits=bits).dequantize(x.dtype)
+        return x
+
+    return _tree_map_with_path(f, params)
+
+
+def quantize_tree(params, *, bits: int = 8, axis: int = -1):
+    """True int8 tree: weights become QTensor leaves, the rest pass through."""
+
+    def f(path, x):
+        if _is_weight(path, x):
+            return quantize_tensor(x, axis=axis, bits=bits)
+        return x
+
+    return _tree_map_with_path(f, params)
+
+
+def dequantize_tree(qparams, dtype=jnp.bfloat16):
+    return jax.tree.map(
+        lambda x: x.dequantize(dtype) if isinstance(x, QTensor) else x,
+        qparams,
+        is_leaf=lambda x: isinstance(x, QTensor),
+    )
+
+
+def fp16_tree(params):
+    """The paper's NPU numerics: FP16 weights (cast round trip)."""
+    return jax.tree.map(lambda x: x.astype(jnp.float16).astype(x.dtype) if hasattr(x, "astype") else x, params)
+
+
+def _tree_map_with_path(f, tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    treedef = jax.tree_util.tree_structure(tree)
+    vals = [f(tuple(str(getattr(k, "key", k)) for k in path), v) for path, v in flat]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def quantization_error(params, qparams_deq) -> float:
+    """Mean relative weight error (sanity metric for tests)."""
+    errs = []
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(qparams_deq)):
+        if hasattr(a, "ndim") and a.ndim >= 2 and a.size >= 4096:
+            na = float(jnp.linalg.norm(a.astype(F32)))
+            errs.append(float(jnp.linalg.norm(a.astype(F32) - b.astype(F32))) / max(na, 1e-9))
+    return float(np.mean(errs)) if errs else 0.0

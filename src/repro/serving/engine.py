@@ -1,0 +1,134 @@
+"""CBO serving engine: deadline-aware two-tier cascade over a request stream.
+
+The control loop per batch:
+  1. fast tier classifies the batch (int8 "NPU" model) — instant answers;
+  2. calibrated confidences go to the AdaptiveController (Algorithm 1),
+     which returns (theta, resolution, capacity) from current bandwidth;
+  3. the data plane escalates the K lowest-confidence frames;
+  4. replies that would land after the frame's deadline are *dropped* and
+     the fast-tier answer stands — the paper's fallback, which doubles as
+     straggler mitigation (a slow/failed slow-tier node degrades accuracy,
+     never correctness or latency).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cascade import cascade_classify
+from repro.core.netsim import Uplink, png_size_model
+from repro.core.policy import AdaptiveController, BandwidthEstimator
+
+
+@dataclass
+class ServeConfig:
+    deadline: float = 0.2  # T (paper: 200 ms)
+    frame_rate: float = 30.0
+    resolutions: tuple = (45, 90, 134, 179, 224)
+    acc_server: tuple = ()  # measured offline (bench_resolution)
+    batch_size: int = 16
+    fast_time: float = 0.020  # Table III: fast tier per frame
+    calib_time: float = 0.008  # Table III: calibration
+    server_time: float = 0.037  # Table III: slow tier per frame
+
+
+@dataclass
+class ServeMetrics:
+    n_frames: int = 0
+    n_offloaded: int = 0
+    n_deadline_miss: int = 0  # escalations that fell back
+    n_correct: int = 0
+    latencies: list = field(default_factory=list)
+
+    @property
+    def accuracy(self) -> float:
+        return self.n_correct / max(self.n_frames, 1)
+
+    @property
+    def offload_frac(self) -> float:
+        return self.n_offloaded / max(self.n_frames, 1)
+
+    def summary(self) -> dict:
+        lat = np.asarray(self.latencies) if self.latencies else np.zeros(1)
+        return {
+            "frames": self.n_frames,
+            "accuracy": round(self.accuracy, 4),
+            "offload_frac": round(self.offload_frac, 4),
+            "deadline_miss_frac": round(self.n_deadline_miss / max(self.n_frames, 1), 4),
+            "p50_latency_ms": round(float(np.percentile(lat, 50)) * 1e3, 2),
+            "p99_latency_ms": round(float(np.percentile(lat, 99)) * 1e3, 2),
+        }
+
+
+class CascadeServer:
+    def __init__(self, cfg: ServeConfig, fast_forward: Callable, slow_forward: Callable,
+                 calibrate: Callable, uplink: Uplink):
+        self.cfg = cfg
+        self.fast_forward = fast_forward
+        self.slow_forward = slow_forward
+        self.calibrate = calibrate
+        self.uplink = uplink
+        self.controller = AdaptiveController(
+            resolutions=cfg.resolutions,
+            acc_server=cfg.acc_server,
+            deadline=cfg.deadline,
+            latency=uplink.latency,
+            server_time=cfg.server_time,
+            size_of=png_size_model,
+            bw=BandwidthEstimator(estimate_bps=uplink.bandwidth_bps),
+        )
+        self.metrics = ServeMetrics()
+
+    def process_stream(self, frames: np.ndarray, labels: Optional[np.ndarray] = None) -> ServeMetrics:
+        """Replay a frame stream at cfg.frame_rate through the cascade."""
+        cfg = self.cfg
+        gamma = 1.0 / cfg.frame_rate
+        B = cfg.batch_size
+        n = len(frames) - len(frames) % B
+        for start in range(0, n, B):
+            batch = jnp.asarray(frames[start : start + B])
+            arrivals = (start + np.arange(B)) * gamma
+            t_done_fast = arrivals + cfg.fast_time + cfg.calib_time
+
+            # plan from current backlog + bandwidth estimate
+            plan = self.controller.plan(now=float(arrivals[0]))
+            capacity = max(len(plan.offloads), 1)
+            theta = plan.theta if plan.offloads else 0.0
+            res = cfg.resolutions[plan.resolution]
+
+            out = cascade_classify(
+                self.fast_forward, self.slow_forward, self.calibrate, batch,
+                threshold=theta, capacity=capacity, resolution=res,
+            )
+            conf = np.asarray(out.conf)
+            escalated = np.asarray(out.escalated)
+            preds = np.asarray(out.preds)
+            fast_preds = np.asarray(out.fast_preds)
+
+            # simulate the uplink for escalated frames; late replies fall back
+            final = fast_preds.copy()
+            for i in range(B):
+                self.controller.add_frame(float(arrivals[i]), float(conf[i]))
+                if not escalated[i]:
+                    self.metrics.latencies.append(cfg.fast_time + cfg.calib_time)
+                    continue
+                payload = png_size_model(res)
+                t_land = self.uplink.transmit(payload, float(t_done_fast[i]))
+                self.controller.bw.observe(payload, t_land - float(t_done_fast[i]) - self.uplink.latency - self.uplink.server_time)
+                if t_land <= arrivals[i] + cfg.deadline:
+                    final[i] = preds[i]
+                    self.metrics.n_offloaded += 1
+                    self.metrics.latencies.append(t_land - arrivals[i])
+                else:  # straggler / over-deadline: keep the fast answer
+                    self.metrics.n_deadline_miss += 1
+                    self.metrics.latencies.append(cfg.deadline)
+            self.metrics.n_frames += B
+            if labels is not None:
+                self.metrics.n_correct += int((final == labels[start : start + B]).sum())
+        return self.metrics

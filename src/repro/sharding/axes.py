@@ -1,0 +1,110 @@
+"""Logical-axis sharding rules + activation constraint helper.
+
+Models never name mesh axes directly; they call ``shard(x, *logical_axes)``.
+A context-local rules table resolves logical -> mesh axes; outside a rules
+context (unit tests on 1 device) ``shard`` is a no-op, so model code is
+identical on a laptop and on a 512-chip mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+_state = threading.local()
+
+
+DEFAULT_RULES: dict[str, Optional[str]] = {
+    # activations
+    "batch": "data",
+    "seq": None,  # sharded over "model" only in SP regions (explicit)
+    "seq_sp": "model",
+    "seq_res": None,  # residual-stream sequence sharding (Megatron-SP); train rules set 'model'
+    "kv_seq": "model",  # decode KV cache sequence splits
+    "embed": None,
+    "heads_act": "model",
+    "head_dim_act": None,  # kv-projection head_dim sharding (hillclimb: 'model')
+    "mlp_act": "model",
+    "vocab_act": "model",
+    "experts_act": "model",
+    "spatial": "data",  # diffusion gen small-batch spatial rows
+    # params
+    "layers": None,
+    "stack": None,
+    "vocab": "model",
+    "embed_tbl": "model",  # token-embedding table: shard d_model, gather local
+    "q_heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "kv_lora": None,
+    "conv_in": None,
+    "conv_out": "model",
+    "classes": None,
+    "ctx": None,
+}
+
+
+def multipod_rules() -> dict[str, Optional[str]]:
+    """On the (pod, data, model) mesh, batch shards over (pod, data)."""
+    r = dict(DEFAULT_RULES)
+    r["batch"] = ("pod", "data")
+    r["spatial"] = ("pod", "data")
+    return r
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    prev = getattr(_state, "ctx", None)
+    if mesh is not None:
+        rules = dict(rules or (multipod_rules() if "pod" in mesh.axis_names else DEFAULT_RULES))
+        rules["_sizes"] = {name: size for name, size in zip(mesh.axis_names, mesh.devices.shape)}
+    _state.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def current_rules() -> Optional[dict]:
+    ctx = getattr(_state, "ctx", None)
+    return ctx[1] if ctx else None
+
+
+def current_mesh() -> Optional[Mesh]:
+    ctx = getattr(_state, "ctx", None)
+    return ctx[0] if ctx else None
+
+
+def _resolve(rules, dim_size, ax, used):
+    mesh_ax = rules.get(ax) if ax else None
+    if mesh_ax is None:
+        return None
+    axes = mesh_ax if isinstance(mesh_ax, tuple) else (mesh_ax,)
+    axes = tuple(a for a in axes if a not in used)
+    if not axes:
+        return None
+    total = 1
+    for a in axes:
+        total *= rules["_sizes"].get(a, 1)
+    if dim_size % total != 0:
+        return None
+    used.update(axes)
+    return axes if len(axes) > 1 else axes[0]
+
+
+def shard(x, *axes: Optional[str]):
+    """Constrain activation sharding by logical axis names (no-op off-mesh)."""
+    ctx = getattr(_state, "ctx", None)
+    if not ctx or ctx[0] is None:
+        return x
+    mesh, rules = ctx
+    if len(axes) != x.ndim:
+        raise ValueError(f"shard(): got {len(axes)} axes for rank-{x.ndim} array")
+    used: set = set()
+    spec = [_resolve(rules, d, a, used) for d, a in zip(x.shape, axes)]
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, PartitionSpec(*spec)))

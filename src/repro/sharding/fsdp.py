@@ -1,0 +1,47 @@
+"""FSDP/ZeRO-3 sharding: extend model-parallel PartitionSpecs with the data
+(and pod) axes on the largest still-unsharded divisible dimension.
+
+Used for training params + optimizer states (arctic-480b does not fit
+otherwise — DESIGN.md §5 napkin math) and optionally for big-model serving
+weights.
+"""
+from __future__ import annotations
+
+import numpy as np
+from jax.sharding import PartitionSpec
+
+
+def fsdp_spec(pspec: PartitionSpec, shape: tuple[int, ...], mesh) -> PartitionSpec:
+    """Add ('data'[, 'pod']) to the best unsharded dim of one leaf."""
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    free = [a for a in ("pod", "data") if a in axes and not _used(pspec, a)]
+    if not free:
+        return pspec
+    factor = int(np.prod([axes[a] for a in free]))
+    entries = list(pspec) + [None] * (len(shape) - len(pspec))
+    # largest unsharded dim divisible by the combined factor
+    cand = [(d, i) for i, (d, e) in enumerate(zip(shape, entries)) if e is None and d % factor == 0 and d >= factor]
+    if not cand:
+        # try 'data' alone
+        if "data" in free and len(free) > 1:
+            factor = axes["data"]
+            cand = [(d, i) for i, (d, e) in enumerate(zip(shape, entries)) if e is None and d % factor == 0]
+            free = ["data"]
+        if not cand:
+            return pspec
+    _, idx = max(cand)
+    entries[idx] = tuple(free) if len(free) > 1 else free[0]
+    return PartitionSpec(*entries)
+
+
+def _used(pspec: PartitionSpec, axis: str) -> bool:
+    for e in pspec:
+        if e == axis or (isinstance(e, tuple) and axis in e):
+            return True
+    return False
+
+
+def tree_fsdp(pspec_tree, struct_tree, mesh):
+    import jax
+
+    return jax.tree.map(lambda ps, st: fsdp_spec(ps, st.shape, mesh), pspec_tree, struct_tree)

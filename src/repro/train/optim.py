@@ -1,0 +1,102 @@
+"""AdamW with configurable state dtypes + ZeRO/FSDP sharding helpers.
+
+Distributed-optimization features (DESIGN.md §5):
+  * low-precision moments (bf16 m/v) — required to fit arctic-480b;
+  * params may act as their own master copy (fp32) or train pure-bf16;
+  * gradient clipping by global norm;
+  * optional int8 gradient compression with error feedback (``compress``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclass(frozen=True)
+class OptimConfig:
+    lr: float = 1e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    m_dtype: str = "float32"  # float32 | bfloat16
+    v_dtype: str = "float32"
+    compress_grads: bool = False  # int8 + error feedback (beyond-paper)
+
+
+def init_state(cfg: OptimConfig, params) -> dict:
+    dt_m = jnp.dtype(cfg.m_dtype)
+    dt_v = jnp.dtype(cfg.v_dtype)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, dt_m), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, dt_v), params),
+    }
+    if cfg.compress_grads:
+        state["err"] = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+    return state
+
+
+def state_struct(cfg: OptimConfig, param_struct) -> dict:
+    """ShapeDtypeStruct mirror of init_state (dry-run)."""
+    dt_m = jnp.dtype(cfg.m_dtype)
+    dt_v = jnp.dtype(cfg.v_dtype)
+    st = {
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+        "m": jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, dt_m), param_struct),
+        "v": jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, dt_v), param_struct),
+    }
+    if cfg.compress_grads:
+        st["err"] = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.bfloat16), param_struct)
+    return st
+
+
+def _compress_decompress(g, err):
+    """int8 round trip with error feedback: returns (g_hat, new_err)."""
+    gf = g.astype(F32) + err.astype(F32)
+    amax = jnp.max(jnp.abs(gf))
+    scale = jnp.maximum(amax, 1e-20) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127)
+    g_hat = q * scale
+    return g_hat.astype(g.dtype), (gf - g_hat).astype(jnp.bfloat16)
+
+
+def apply_updates(cfg: OptimConfig, params, grads, state) -> tuple:
+    """One AdamW step; returns (new_params, new_state)."""
+    step = state["step"] + 1
+    if cfg.compress_grads:
+        pairs = jax.tree.map(_compress_decompress, grads, state["err"])
+        grads = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+        new_err = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    # global-norm clip (clip_norm=0 disables — see EXPERIMENTS.md §Perf)
+    if cfg.clip_norm > 0:
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(F32))) for g in jax.tree.leaves(grads)))
+        clip = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gn, 1e-9))
+    else:
+        clip = jnp.ones((), F32)
+
+    bc1 = 1.0 - cfg.b1 ** step.astype(F32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(F32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(F32) * clip
+        m_new = cfg.b1 * m.astype(F32) + (1 - cfg.b1) * gf
+        v_new = cfg.b2 * v.astype(F32) + (1 - cfg.b2) * jnp.square(gf)
+        delta = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + cfg.eps)
+        p_new = p.astype(F32) - cfg.lr * (delta + cfg.weight_decay * p.astype(F32))
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {"step": step, "m": new_m, "v": new_v}
+    if cfg.compress_grads:
+        new_state["err"] = new_err
+    return new_params, new_state

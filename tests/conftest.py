@@ -1,0 +1,14 @@
+import os
+import sys
+
+# Tests see the real single CPU device (the dry-run subprocess sets its own
+# XLA_FLAGS; never set device-count flags here — see assignment note).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,101 @@
+"""Calibration (paper §III-B, Table I): metrics + the three calibrators."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.calibration import (
+    IsotonicCalibrator,
+    PlattCalibrator,
+    TemperatureCalibrator,
+    ece,
+    mce,
+    reliability_bins,
+)
+
+
+def _miscalibrated_data(n=4000, seed=0):
+    """Scores cluster high while true accuracy is mediocre — the paper's
+    Figure 5 pathology (conf 0.9 bin has 0.5 accuracy)."""
+    rng = np.random.default_rng(seed)
+    true_p = rng.uniform(0.05, 0.95, size=n)  # actual correctness prob
+    correct = (rng.uniform(size=n) < true_p).astype(float)
+    # strongly overconfident scores (paper: ECE 0.27 uncalibrated)
+    conf = np.clip(0.78 + 0.25 * (true_p - 0.5) + 0.08 * rng.standard_normal(n), 0.01, 0.999)
+    return conf, correct
+
+
+def test_ece_perfect_calibration_is_zero():
+    rng = np.random.default_rng(1)
+    conf = rng.uniform(0.05, 0.95, 200_000)
+    correct = (rng.uniform(size=len(conf)) < conf).astype(float)
+    assert ece(conf, correct) < 0.02
+    assert mce(conf, correct) < 0.05
+
+
+def test_ece_detects_miscalibration():
+    conf, correct = _miscalibrated_data()
+    assert ece(conf, correct) > 0.1
+
+
+def test_platt_reduces_ece_and_mce():
+    conf, correct = _miscalibrated_data()
+    platt = PlattCalibrator.fit(conf, correct)
+    cal = np.asarray(platt(conf))
+    assert ece(cal, correct) < ece(conf, correct) * 0.5
+    assert mce(cal, correct) < mce(conf, correct)
+
+
+def test_isotonic_reduces_ece():
+    conf, correct = _miscalibrated_data()
+    iso = IsotonicCalibrator.fit(conf, correct)
+    cal = np.asarray(iso(conf))
+    assert ece(cal, correct) < ece(conf, correct) * 0.6
+
+
+def test_isotonic_overfits_more_than_platt_on_holdout():
+    """The paper's Table I finding: Platt generalizes better on small data."""
+    conf, correct = _miscalibrated_data(n=300, seed=2)
+    conf_te, correct_te = _miscalibrated_data(n=4000, seed=3)
+    platt = PlattCalibrator.fit(conf, correct)
+    iso = IsotonicCalibrator.fit(conf, correct)
+    e_platt = ece(np.asarray(platt(conf_te)), correct_te)
+    e_iso = ece(np.asarray(iso(conf_te)), correct_te)
+    assert e_platt <= e_iso + 0.02  # platt no worse (usually clearly better)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.floats(0, 1), st.booleans()), min_size=5, max_size=200))
+def test_isotonic_is_monotone_and_bounded(pairs):
+    scores = np.array([p[0] for p in pairs])
+    correct = np.array([float(p[1]) for p in pairs])
+    iso = IsotonicCalibrator.fit(scores, correct)
+    xs = np.linspace(0, 1, 101)
+    ys = np.asarray(iso(xs))
+    assert np.all(np.diff(ys) >= -1e-6), "isotonic output must be nondecreasing"
+    assert np.all((ys >= 0) & (ys <= 1))
+
+
+def test_temperature_scaling_reduces_nll_miscalibration():
+    rng = np.random.default_rng(4)
+    n, k = 5000, 10
+    labels = rng.integers(k, size=n)
+    logits = rng.standard_normal((n, k)) * 1.0
+    logits[np.arange(n), labels] += 1.0
+    logits *= 4.0  # overconfident
+    t = TemperatureCalibrator.fit(logits, labels)
+    assert t.temperature > 1.5  # must cool the overconfident logits
+    import jax.numpy as jnp
+
+    conf_raw = np.asarray(jnp.max(jnp.exp(logits - np.max(logits, -1, keepdims=True)) /
+                                  np.sum(np.exp(logits - np.max(logits, -1, keepdims=True)), -1, keepdims=True), -1))
+    correct = (np.argmax(logits, -1) == labels).astype(float)
+    cal = np.asarray(t(logits))
+    assert ece(cal, correct) < ece(conf_raw, correct)
+
+
+def test_reliability_bins_paper_binning():
+    conf = np.array([0.05, 0.15, 0.95, 0.95])
+    correct = np.array([1.0, 0.0, 1.0, 0.0])
+    count, acc, mean_conf = reliability_bins(conf, correct, 10)
+    assert count[0] == 1 and count[1] == 1 and count[9] == 2
+    assert acc[9] == 0.5

@@ -1,0 +1,87 @@
+"""Cascade data-plane invariants (core/cascade.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cascade import cascade_classify, degrade_resolution
+
+B, R, C = 16, 16, 4
+
+
+def _fake_tiers():
+    """fast tier: noisy classifier; slow tier: perfect oracle planted in px 0."""
+
+    def fast(images):
+        # class signal in pixel (0,0,0..C); noise makes some wrong
+        sig = images[:, 0, 0, :C] + 0.8 * images[:, 1, 1, :C]
+        return sig
+
+    def slow(images):
+        return images[:, 0, 0, :C] * 10.0
+
+    return fast, slow
+
+
+def _batch(key):
+    labels = jax.random.randint(key, (B,), 0, C)
+    base = jax.random.normal(jax.random.PRNGKey(1), (B, R, R, C)) * 0.3
+    imgs = base.at[jnp.arange(B), 0, 0, labels].set(2.0)
+    return imgs, labels
+
+
+def test_capacity_zero_returns_fast_preds():
+    fast, slow = _fake_tiers()
+    imgs, labels = _batch(jax.random.PRNGKey(0))
+    out = cascade_classify(fast, slow, lambda s: s, imgs, threshold=1.0, capacity=1, resolution=R)
+    out0 = cascade_classify(fast, slow, lambda s: s, imgs, threshold=0.0, capacity=B, resolution=R)
+    assert not bool(out0.escalated.any())
+    assert np.array_equal(np.asarray(out0.preds), np.asarray(out0.fast_preds))
+
+
+def test_full_escalation_matches_slow_tier():
+    fast, slow = _fake_tiers()
+    imgs, labels = _batch(jax.random.PRNGKey(0))
+    out = cascade_classify(fast, slow, lambda s: s, imgs, threshold=1.1, capacity=B, resolution=R)
+    assert bool(out.escalated.all())
+    slow_preds = jnp.argmax(slow(imgs), -1)
+    assert np.array_equal(np.asarray(out.preds), np.asarray(slow_preds))
+    assert np.asarray(out.preds == labels).mean() == 1.0
+
+
+def test_escalation_improves_accuracy_monotonically():
+    fast, slow = _fake_tiers()
+    imgs, labels = _batch(jax.random.PRNGKey(2))
+    accs = []
+    for cap in (0, 4, 8, B):
+        out = cascade_classify(fast, slow, lambda s: s, imgs,
+                               threshold=1.1, capacity=max(cap, 1), resolution=R)
+        preds = np.asarray(out.preds) if cap else np.asarray(out.fast_preds)
+        accs.append((preds == np.asarray(labels)).mean())
+    assert accs == sorted(accs), accs  # slow tier is an oracle here
+
+
+def test_escalated_subset_of_gate_and_lowest_conf():
+    fast, slow = _fake_tiers()
+    imgs, _ = _batch(jax.random.PRNGKey(3))
+    out = cascade_classify(fast, slow, lambda s: s, imgs, threshold=0.6, capacity=4, resolution=R)
+    conf = np.asarray(out.conf)
+    esc = np.asarray(out.escalated)
+    assert esc.sum() <= 4
+    if esc.any():
+        assert conf[esc].max() < 0.6  # only gated frames escalate
+        # escalated are the lowest-confidence gated frames
+        gated = conf < 0.6
+        n_esc = int(esc.sum())
+        worst = np.sort(conf[gated])[:n_esc]
+        np.testing.assert_allclose(np.sort(conf[esc]), worst, rtol=1e-6)
+
+
+def test_degrade_resolution_roundtrip_shapes():
+    imgs = jax.random.normal(jax.random.PRNGKey(0), (2, 32, 32, 3))
+    lo = degrade_resolution(imgs, 8)
+    assert lo.shape == imgs.shape
+    # degrading loses information
+    assert float(jnp.abs(lo - imgs).mean()) > 1e-3
+    same = degrade_resolution(imgs, 32)
+    np.testing.assert_allclose(np.asarray(same), np.asarray(imgs))

@@ -1,0 +1,85 @@
+"""CBO scheduling (paper §IV): optimal DP vs brute force, Algorithm 1 props."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cbo import Env, Frame, brute_force, cbo_plan, optimal_schedule
+
+
+def _random_instance(rng, n=None, m=None):
+    n = n or int(rng.integers(1, 7))
+    m = m or int(rng.integers(1, 4))
+    gamma = 1 / 30
+    frames = [
+        Frame(arrival=i * gamma, conf=float(rng.uniform(0.2, 0.99)),
+              sizes=tuple(sorted(rng.uniform(1e3, 2e5, size=m))))
+        for i in range(n)
+    ]
+    env = Env(bandwidth=float(rng.uniform(1e5, 5e6)), latency=0.05, server_time=0.037,
+              deadline=0.2, acc_server=tuple(sorted(rng.uniform(0.5, 0.99, size=m))))
+    return frames, env
+
+
+def test_optimal_matches_brute_force_fuzz(rng):
+    for trial in range(120):
+        frames, env = _random_instance(rng)
+        opt = optimal_schedule(frames, env)
+        assert opt.base_acc + opt.total_gain == pytest.approx(brute_force(frames, env), abs=1e-9), trial
+
+
+def test_online_never_beats_optimal(rng):
+    for trial in range(120):
+        frames, env = _random_instance(rng)
+        online = cbo_plan(frames, env)
+        bf = brute_force(frames, env)
+        assert online.base_acc + online.total_gain <= bf + 1e-9, trial
+
+
+def test_online_plans_are_feasible(rng):
+    """Every planned offload chain must fit the serial uplink + deadlines."""
+    for trial in range(80):
+        frames, env = _random_instance(rng, n=int(rng.integers(2, 8)))
+        plan = cbo_plan(frames, env)
+        # replay the chain in confidence order (the DP's schedule order)
+        chain = sorted(plan.offloads, key=lambda ij: -frames[ij[0]].conf)
+        t = 0.0
+        for i, r in chain:
+            f = frames[i]
+            t = max(t, f.arrival) + f.sizes[r] / env.bandwidth
+            assert t + env.server_time + env.latency <= f.arrival + env.deadline + 1e-9
+
+
+def test_theta_semantics(rng):
+    """theta = max confidence among offloaded frames; frames above theta stay."""
+    for trial in range(60):
+        frames, env = _random_instance(rng, n=5)
+        plan = cbo_plan(frames, env)
+        if not plan.offloads:
+            continue
+        off_confs = [frames[i].conf for i, _ in plan.offloads]
+        assert plan.theta == pytest.approx(max(off_confs))
+
+
+def test_zero_bandwidth_offloads_nothing():
+    frames = [Frame(0.0, 0.5, (1e4,))]
+    env = Env(bandwidth=1e-6, latency=0.05, server_time=0.037, deadline=0.2, acc_server=(0.9,))
+    plan = cbo_plan(frames, env)
+    assert plan.offloads == []
+
+
+def test_high_conf_frames_not_offloaded():
+    """Offloading a frame with conf > server accuracy can only hurt."""
+    env = Env(bandwidth=1e9, latency=0.0, server_time=0.0, deadline=1.0, acc_server=(0.8,))
+    frames = [Frame(0.0, 0.95, (1e3,)), Frame(1 / 30, 0.2, (1e3,))]
+    plan = cbo_plan(frames, env)
+    assert (0, 0) not in plan.offloads
+    assert any(i == 1 for i, _ in plan.offloads)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 5), st.integers(1, 3), st.integers(0, 10_000))
+def test_optimal_matches_brute_force_hypothesis(n, m, seed):
+    rng = np.random.default_rng(seed)
+    frames, env = _random_instance(rng, n=n, m=m)
+    opt = optimal_schedule(frames, env)
+    assert opt.base_acc + opt.total_gain == pytest.approx(brute_force(frames, env), abs=1e-9)

@@ -1,0 +1,74 @@
+"""Data pipeline determinism + confidence-score properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.confidence import margin, max_softmax, neg_entropy, sequence_confidence
+from repro.data.pipeline import DeterministicPipeline, PipelineConfig, token_batch_fn
+from repro.data.video import VideoDataConfig, make_dataset
+
+
+def test_video_dataset_deterministic():
+    cfg = VideoDataConfig(n_classes=4, img_res=16, frames_per_video=3)
+    a = make_dataset(cfg, 5, seed=3)
+    b = make_dataset(cfg, 5, seed=3)
+    np.testing.assert_array_equal(a["frames"], b["frames"])
+    np.testing.assert_array_equal(a["labels"], b["labels"])
+    c = make_dataset(cfg, 5, seed=4)
+    assert not np.array_equal(a["frames"], c["frames"])
+
+
+def test_video_difficulty_skew_increases_noise():
+    cfg = VideoDataConfig(n_classes=4, img_res=16, frames_per_video=8,
+                          class_difficulty=(0.0, 0.3, 0.6, 1.0))
+    d = make_dataset(cfg, 60, seed=0)
+    # per-class high-frequency energy (noise proxy) grows with difficulty
+    def hf(frames):
+        return float(np.abs(np.diff(frames, axis=1)).mean())
+    e = [hf(d["frames"][d["labels"] == c]) for c in range(4)]
+    assert e[0] < e[-1]
+
+
+def test_pipeline_batch_at_is_pure():
+    pipe = DeterministicPipeline(PipelineConfig(global_batch=8, seed=1),
+                                 token_batch_fn(100, 16), dataset_size=1000)
+    a, b = pipe.batch_at(7), pipe.batch_at(7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert not np.array_equal(pipe.batch_at(7)["tokens"], pipe.batch_at(8)["tokens"])
+
+
+def test_pipeline_sharding_partitions_batch():
+    fn = token_batch_fn(100, 8)
+    full = DeterministicPipeline(PipelineConfig(global_batch=8, seed=0), fn, 100)
+    s0 = DeterministicPipeline(PipelineConfig(global_batch=8, seed=0), fn, 100, shard_index=0, shard_count=2)
+    s1 = DeterministicPipeline(PipelineConfig(global_batch=8, seed=0), fn, 100, shard_index=1, shard_count=2)
+    assert s0.local_batch == 4 and s1.local_batch == 4
+    assert s0.batch_at(3)["tokens"].shape[0] == 4
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 1000), st.integers(2, 20))
+def test_confidence_scores_bounded(seed, k):
+    logits = jax.random.normal(jax.random.PRNGKey(seed), (8, k)) * 5
+    for fn in (max_softmax, margin, neg_entropy):
+        c = np.asarray(fn(logits))
+        assert np.all(c >= -1e-6) and np.all(c <= 1 + 1e-6), fn.__name__
+    # max_softmax lower bound is 1/k (uniform)
+    assert np.all(np.asarray(max_softmax(logits)) >= 1.0 / k - 1e-6)
+
+
+def test_one_hot_logits_give_full_confidence():
+    logits = jnp.array([[100.0, 0.0, 0.0]])
+    assert float(max_softmax(logits)[0]) == pytest.approx(1.0)
+    assert float(margin(logits)[0]) == pytest.approx(1.0)
+    assert float(neg_entropy(logits)[0]) == pytest.approx(1.0, abs=1e-5)
+
+
+def test_sequence_confidence_masked_mean():
+    logits = jnp.zeros((1, 4, 5))
+    logits = logits.at[0, 0, 0].set(100.0)  # token 0 fully confident
+    mask = jnp.array([[1, 0, 0, 0]])
+    assert float(sequence_confidence(logits, mask)[0]) == pytest.approx(1.0)
+    assert float(sequence_confidence(logits)[0]) < 0.5

@@ -1,0 +1,125 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.kernel import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.fused_calib_gate.kernel import calib_gate
+from repro.kernels.fused_calib_gate.ref import calib_gate_ref
+from repro.kernels.int8_matmul import ref as i8ref
+from repro.kernels.int8_matmul.kernel import int8_matmul
+
+
+# ------------------------------- int8 matmul ------------------------------- #
+
+
+@pytest.mark.parametrize("M,K,N,bm,bn,bk", [
+    (128, 256, 128, 128, 128, 128),
+    (256, 512, 384, 128, 128, 256),
+    (512, 1024, 256, 256, 256, 512),
+    (128, 128, 128, 64, 64, 64),
+])
+@pytest.mark.parametrize("out_dtype", [jnp.float32, jnp.bfloat16])
+def test_int8_matmul_sweep(M, K, N, bm, bn, bk, out_dtype):
+    key = jax.random.PRNGKey(M + K + N)
+    x = jax.random.normal(key, (M, K), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N), jnp.float32)
+    xq, xs = i8ref.quantize_rows(x)
+    wq, ws = i8ref.quantize_cols(w)
+    out_k = int8_matmul(xq, xs, wq, ws, bm=bm, bn=bn, bk=bk, out_dtype=out_dtype, interpret=True)
+    out_r = i8ref.int8_matmul_ref(xq, xs, wq, ws, out_dtype)
+    np.testing.assert_allclose(np.asarray(out_k, np.float32), np.asarray(out_r, np.float32),
+                               rtol=1e-2 if out_dtype == jnp.bfloat16 else 1e-6, atol=1e-2)
+
+
+def test_int8_matmul_quantization_error_bounded():
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 512), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (512, 256), jnp.float32)
+    out = i8ref.matmul_ref(x, w)
+    rel = float(jnp.linalg.norm(out - x @ w) / jnp.linalg.norm(x @ w))
+    assert rel < 0.05, rel  # W8A8 with per-channel scales ~1% typical
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 4), st.integers(1, 4))
+def test_int8_matmul_property(mi, ki, ni):
+    M, K, N = 64 * mi, 64 * ki, 64 * ni
+    x = jax.random.normal(jax.random.PRNGKey(M * K), (M, K), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(K * N + 1), (K, N), jnp.float32)
+    xq, xs = i8ref.quantize_rows(x)
+    wq, ws = i8ref.quantize_cols(w)
+    out_k = int8_matmul(xq, xs, wq, ws, bm=64, bn=64, bk=64, interpret=True)
+    out_r = i8ref.int8_matmul_ref(xq, xs, wq, ws)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), rtol=1e-6, atol=1e-6)
+
+
+# ----------------------------- flash attention ----------------------------- #
+
+
+@pytest.mark.parametrize("B,S,H,D,bq,bk", [
+    (1, 256, 2, 64, 128, 128),
+    (2, 512, 4, 64, 128, 256),
+    (2, 384, 2, 128, 128, 128),
+    (1, 1024, 1, 64, 256, 512),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(B, S, H, D, bq, bk, causal):
+    ks = jax.random.split(jax.random.PRNGKey(S + H), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, D), jnp.float32)
+    out = flash_attention(q, k, v, causal=causal, bq=bq, bk=bk, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (2, 256, 2, 64), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (2, 256, 2, 64), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (2, 256, 2, 64), jnp.bfloat16)
+    out = flash_attention(q, k, v, causal=True, bq=128, bk=128, interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref, np.float32), rtol=3e-2, atol=3e-2)
+
+
+def test_flash_matches_model_blockwise_oracle():
+    """The model's scan-based blockwise path and the kernel must agree."""
+    from repro.models.layers import attention_blockwise
+
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (1, 512, 2, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 512, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 512, 2, 64), jnp.float32)
+    a = flash_attention(q, k, v, causal=True, bq=128, bk=128, interpret=True)
+    b = attention_blockwise(q, k, v, causal=True, chunk=128)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-5)
+
+
+# ----------------------------- fused calib gate ---------------------------- #
+
+
+@pytest.mark.parametrize("B,V,bb,bv", [
+    (64, 1024, 64, 256),
+    (128, 4096, 64, 1024),
+    (256, 8192, 128, 2048),
+])
+def test_calib_gate_sweep(B, V, bb, bv):
+    logits = jax.random.normal(jax.random.PRNGKey(B + V), (B, V), jnp.float32) * 3
+    for a, b, theta in [(-6.0, 2.0, 0.7), (-1.0, 0.0, 0.5), (-10.0, 5.0, 0.9)]:
+        ck, gk = calib_gate(logits, a, b, theta, bb=bb, bv=bv, interpret=True)
+        cr, gr = calib_gate_ref(logits, a, b, theta)
+        np.testing.assert_allclose(np.asarray(ck), np.asarray(cr), rtol=1e-5, atol=1e-6)
+        assert np.array_equal(np.asarray(gk), np.asarray(gr))
+
+
+def test_calib_gate_extreme_logits_stable():
+    logits = jnp.concatenate([
+        jnp.full((8, 512), -1e4, jnp.float32),
+        jax.random.normal(jax.random.PRNGKey(0), (8, 512)) * 50,
+    ], axis=1)
+    ck, _ = calib_gate(logits, -6.0, 2.0, 0.5, bb=8, bv=256, interpret=True)
+    assert bool(jnp.all(jnp.isfinite(ck)))

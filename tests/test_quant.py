@@ -1,0 +1,64 @@
+"""Quantization substrate ("NPU" simulation)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.quant.quantize import (
+    QTensor,
+    dequantize_tree,
+    fp16_tree,
+    qdq_tree,
+    quantization_error,
+    quantize_tensor,
+    quantize_tree,
+)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_roundtrip_error_bound(seed):
+    """|x - deq(q(x))| <= scale/2 elementwise (symmetric int8)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64, 128), jnp.float32)
+    q = quantize_tensor(x, axis=-1)
+    err = jnp.abs(q.dequantize(jnp.float32) - x)
+    assert bool(jnp.all(err <= q.scale / 2 + 1e-6))
+
+
+def test_qdq_preserves_structure_and_dtypes():
+    tree = {
+        "w": jax.random.normal(jax.random.PRNGKey(0), (128, 64), jnp.float32),
+        "scale": jnp.ones((64,), jnp.float32),
+        "bias": jnp.zeros((64,), jnp.float32),
+    }
+    out = qdq_tree(tree)
+    assert jax.tree.structure(out) == jax.tree.structure(tree)
+    assert all(a.dtype == b.dtype and a.shape == b.shape
+               for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)))
+    # weights change, small leaves do not
+    assert not np.allclose(np.asarray(tree["w"]), np.asarray(out["w"]))
+    np.testing.assert_array_equal(np.asarray(tree["scale"]), np.asarray(out["scale"]))
+
+
+def test_quantize_tree_roundtrip():
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(0), (256, 128), jnp.float32)}
+    qt = quantize_tree(tree)
+    assert isinstance(qt["w"], QTensor) and qt["w"].values.dtype == jnp.int8
+    deq = dequantize_tree(qt, jnp.float32)
+    rel = quantization_error(tree, deq)
+    assert 0 < rel < 0.01
+
+
+def test_quantization_hurts_a_trained_model_less_at_8bit_than_4bit():
+    x = jax.random.normal(jax.random.PRNGKey(0), (128, 64), jnp.float32)
+    e8 = float(jnp.abs(quantize_tensor(x, bits=8).dequantize(jnp.float32) - x).mean())
+    e4 = float(jnp.abs(quantize_tensor(x, bits=4).dequantize(jnp.float32) - x).mean())
+    assert e8 < e4 / 4
+
+
+def test_fp16_tree_is_roundtrip_cast():
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(0), (32, 32), jnp.float32) * 1e-3}
+    out = fp16_tree(tree)
+    assert out["w"].dtype == jnp.float32
+    assert float(jnp.abs(out["w"] - tree["w"]).max()) > 0  # precision was lost

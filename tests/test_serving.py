@@ -1,0 +1,76 @@
+"""Serving engine: deadline handling, straggler fallback, netsim."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.netsim import Uplink, mbps, png_size_model
+from repro.serving.engine import CascadeServer, ServeConfig
+
+
+def _tiers():
+    def fast(images):  # weak: signal + noise channel
+        return images[:, 0, 0, :4] + images[:, 1, 1, :4]
+
+    def slow(images):  # oracle
+        return images[:, 0, 0, :4] * 10.0
+
+    return fast, slow
+
+
+def _stream(n=64, res=8, seed=0):
+    key = jax.random.PRNGKey(seed)
+    labels = np.asarray(jax.random.randint(key, (n,), 0, 4))
+    imgs = np.asarray(jax.random.normal(jax.random.PRNGKey(1), (n, res, res, 4))) * 0.8
+    imgs[np.arange(n), 0, 0, labels] = 2.0
+    return imgs.astype(np.float32), labels
+
+
+def _server(bw_mbps, latency=0.05):
+    cfg = ServeConfig(resolutions=(4, 8), acc_server=(0.7, 0.99), batch_size=16,
+                      frame_rate=30.0, deadline=0.2)
+    fast, slow = _tiers()
+    up = Uplink(bandwidth_bps=mbps(bw_mbps), latency=latency, server_time=cfg.server_time)
+    return CascadeServer(cfg, fast, slow, lambda s: s, up)
+
+
+def test_serving_improves_over_fast_tier_with_bandwidth():
+    imgs, labels = _stream()
+    srv = _server(bw_mbps=50.0)
+    m = srv.process_stream(imgs, labels)
+    fast, _ = _tiers()
+    fast_acc = float((np.argmax(np.asarray(fast(jnp.asarray(imgs))), -1) == labels).mean())
+    assert m.accuracy >= fast_acc - 1e-9
+    assert m.offload_frac > 0
+
+
+def test_serving_no_bandwidth_equals_fast_tier():
+    imgs, labels = _stream()
+    srv = _server(bw_mbps=0.001)
+    m = srv.process_stream(imgs, labels)
+    fast, _ = _tiers()
+    fast_acc = float((np.argmax(np.asarray(fast(jnp.asarray(imgs))), -1) == labels).mean())
+    assert abs(m.accuracy - fast_acc) < 1e-9
+    assert m.offload_frac == 0.0
+
+
+def test_deadline_misses_fall_back_not_crash():
+    """Huge latency: escalations land late; fast answers must stand."""
+    imgs, labels = _stream()
+    srv = _server(bw_mbps=50.0, latency=10.0)
+    m = srv.process_stream(imgs, labels)
+    assert m.n_offloaded == 0  # all replies late -> straggler fallback
+    assert max(m.latencies) <= srv.cfg.deadline + 1e-9
+
+
+def test_uplink_serializes_transfers():
+    up = Uplink(bandwidth_bps=1000.0, latency=0.0, server_time=0.0)
+    t1 = up.transmit(500, 0.0)  # 0.5s tx
+    t2 = up.transmit(500, 0.0)  # queued behind the first
+    assert t1 == pytest.approx(0.5)
+    assert t2 == pytest.approx(1.0)
+
+
+def test_png_size_model_quadratic():
+    assert png_size_model(224) == pytest.approx(60_000)
+    assert png_size_model(112) == pytest.approx(15_000)
