@@ -18,6 +18,7 @@ def main() -> None:
     from benchmarks import (
         bench_calibration,
         bench_kernels,
+        bench_multistream,
         bench_network,
         bench_optimal_gap,
         bench_reliability,
@@ -32,7 +33,7 @@ def main() -> None:
     results = {}
     for mod in (bench_calibration, bench_reliability, bench_threshold_sweep,
                 bench_resolution, bench_tiers, bench_kernels,
-                bench_network, bench_optimal_gap):
+                bench_network, bench_optimal_gap, bench_multistream):
         name = mod.__name__.split(".")[-1]
         print(f"=== {name} ===", flush=True)
         t = time.time()

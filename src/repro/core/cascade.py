@@ -22,6 +22,7 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.confidence import max_softmax
 
@@ -70,9 +71,7 @@ def cascade_classify(
     """
     B = images.shape[0]
     K = min(capacity, B)
-    fast_logits = fast_forward(images)
-    conf = calibrate(max_softmax(fast_logits)).astype(F32)
-    fast_preds = jnp.argmax(fast_logits, axis=-1)
+    fast_preds, conf = fast_pass(fast_forward, calibrate, images)
 
     gate = conf < threshold
     score = jnp.where(gate, -conf, -jnp.inf)  # lowest confidence first
@@ -86,6 +85,39 @@ def cascade_classify(
     merged = fast_preds.at[esc_idx].set(jnp.where(valid, slow_preds, jnp.take(fast_preds, esc_idx)))
     escalated = jnp.zeros((B,), bool).at[esc_idx].set(valid)
     return CascadeOut(merged, fast_preds, conf, escalated, esc_idx)
+
+
+def fast_pass(fast_forward, calibrate, images):
+    """Fast-tier half of the cascade: predictions + calibrated confidence.
+
+    The multi-stream engine runs this once over the *concatenated* frames of
+    every stream (one batched NPU call), then lets each stream's controller
+    gate its own slice — the slow-tier half is ``slow_pass_multires``.
+    """
+    logits = fast_forward(images)
+    conf = calibrate(max_softmax(logits)).astype(F32)
+    return jnp.argmax(logits, axis=-1), conf
+
+
+def slow_pass_multires(slow_forward, images, resolutions):
+    """Slow-tier half for a gathered cross-stream escalation batch.
+
+    ``images`` are the low-confidence frames aggregated across all streams;
+    ``resolutions`` gives each frame's planned upload resolution (streams may
+    plan different fidelities). Each frame is degraded at its own resolution,
+    then the whole batch runs through ONE slow-tier call — that batching is
+    the point: N streams cost one server invocation per round, not N.
+    """
+    res = np.asarray(resolutions)
+    if len(res) != images.shape[0]:
+        raise ValueError("one resolution per gathered image")
+    degraded = images
+    for r in np.unique(res):
+        sel = np.flatnonzero(res == r)
+        degraded = degraded.at[sel].set(
+            degrade_resolution(jnp.take(images, sel, axis=0), int(r))
+        )
+    return jnp.argmax(slow_forward(degraded), axis=-1)
 
 
 def make_cascade_fn(fast_forward, slow_forward, calibrate, *, capacity: int, resolution: int):

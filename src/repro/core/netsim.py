@@ -3,6 +3,14 @@
 Serial uplink with (possibly time-varying) bandwidth, fixed latency, and a
 server processing time. Deterministic given a seed. Bandwidths are in
 megabits/s at the API surface (as in the paper's figures); bytes internally.
+
+The uplink is the shared, contended resource in multi-stream serving: every
+transfer — whichever stream submitted it — serializes through the same
+queue. ``transmit`` handles one transfer; ``transmit_batch`` handles a whole
+round of transfers at once (vectorized Lindley recursion when the bandwidth
+is constant) and is what the multi-stream engine uses. Both update the same
+``_busy_until`` cursor and the same contention counters, so they can be
+freely mixed.
 """
 from __future__ import annotations
 
@@ -25,6 +33,10 @@ class Uplink:
     seed: int = 0
     _busy_until: float = 0.0
     _rng: np.random.Generator = field(default=None, repr=False)
+    # contention accounting (updated by transmit / transmit_batch)
+    n_transfers: int = 0
+    busy_seconds: float = 0.0  # total wire time
+    queued_seconds: float = 0.0  # total head-of-line blocking across transfers
 
     def __post_init__(self):
         self._rng = np.random.default_rng(self.seed)
@@ -40,10 +52,45 @@ class Uplink:
 
     def transmit(self, payload_bytes: float, t_submit: float) -> float:
         """Queue a transfer; returns the time the *reply* lands."""
-        bw = self.current_bandwidth(max(t_submit, self._busy_until))
         start = max(t_submit, self._busy_until)
+        bw = self.current_bandwidth(start)
         end_tx = start + payload_bytes / bw
         self._busy_until = end_tx
+        self.n_transfers += 1
+        self.busy_seconds += end_tx - start
+        self.queued_seconds += start - t_submit
+        return end_tx + self.server_time + self.latency
+
+    def transmit_batch(self, payload_bytes, t_submit) -> np.ndarray:
+        """Queue many transfers in the given order; returns reply-land times.
+
+        Transfers serialize in array order (the scheduler decides that order
+        — see ``serving/scheduler.py``), exactly as if ``transmit`` had been
+        called once per element. With constant bandwidth the whole queue is
+        one vectorized max-plus (Lindley) recursion:
+
+            end_i = max_{j<=i}( max(t_submit_j, busy_0) + sum_{k=j..i} tx_k )
+
+        computed with a cumsum + running max. With jitter the bandwidth
+        depends on each transfer's start time, so we fall back to the serial
+        loop (still a single call at the API surface).
+        """
+        payloads = np.asarray(payload_bytes, dtype=np.float64)
+        subs = np.asarray(t_submit, dtype=np.float64)
+        if payloads.size == 0:
+            return np.zeros(0, dtype=np.float64)
+        if self.jitter > 0:
+            return np.asarray([self.transmit(float(p), float(t)) for p, t in zip(payloads, subs)])
+        tx = payloads / self.bandwidth_bps
+        csum = np.cumsum(tx)
+        # max(t_submit_j, busy_0) - csum_{j-1}, then running max restores the recursion
+        eff = np.maximum(subs, self._busy_until) - (csum - tx)
+        end_tx = np.maximum.accumulate(eff) + csum
+        starts = end_tx - tx
+        self._busy_until = float(end_tx[-1])
+        self.n_transfers += payloads.size
+        self.busy_seconds += float(tx.sum())
+        self.queued_seconds += float(np.clip(starts - subs, 0.0, None).sum())
         return end_tx + self.server_time + self.latency
 
     def would_land_at(self, payload_bytes: float, t_submit: float) -> float:
@@ -51,8 +98,16 @@ class Uplink:
         start = max(t_submit, self._busy_until)
         return start + payload_bytes / bw + self.server_time + self.latency
 
+    def utilization(self, horizon: float) -> float:
+        """Wire time over [0, horizon]. Values > 1.0 mean overload: queued
+        transfers were still draining after the horizon ended."""
+        return self.busy_seconds / max(horizon, 1e-12)
+
     def reset(self):
         self._busy_until = 0.0
+        self.n_transfers = 0
+        self.busy_seconds = 0.0
+        self.queued_seconds = 0.0
 
 
 def png_size_model(res: int, *, base_res: int = 224, base_bytes: float = 60_000.0) -> float:

@@ -42,7 +42,9 @@ class AdaptiveController:
 
     def plan(self, now: float) -> Plan:
         env = Env(
-            bandwidth=self.bw.estimate_bps,
+            # floor at 1 byte/s: a dead link must plan "all local", not
+            # divide by zero inside the DP
+            bandwidth=max(self.bw.estimate_bps, 1.0),
             latency=self.latency,
             server_time=self.server_time,
             deadline=self.deadline,
@@ -52,7 +54,17 @@ class AdaptiveController:
         self.backlog = [f for f in self.backlog if f.arrival + self.deadline > now]
         return cbo_plan(self.backlog, env, now=now)
 
-    def consume(self, frame_indices):
-        """Remove frames that were actually offloaded."""
-        drop = set(frame_indices)
-        self.backlog = [f for i, f in enumerate(self.backlog) if i not in drop]
+    def consume(self, frame_indices) -> int:
+        """Remove frames that were actually offloaded.
+
+        ``frame_indices`` are backlog indices as seen by the most recent
+        ``plan()`` call (which prunes expired frames before planning, so the
+        indices stay aligned as long as consume runs before new ``add_frame``
+        calls — appends only ever extend the tail). Returns the number of
+        frames removed; out-of-range indices are ignored.
+        """
+        drop = {int(i) for i in frame_indices}
+        kept = [f for i, f in enumerate(self.backlog) if i not in drop]
+        removed = len(self.backlog) - len(kept)
+        self.backlog = kept
+        return removed

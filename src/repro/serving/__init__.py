@@ -1,0 +1,28 @@
+"""CBO serving subsystem (paper §IV-D, generalized to many streams).
+
+Modules:
+  * ``engine``    — ``CascadeServer`` (single stream) and
+                    ``MultiStreamServer`` (N streams, shared uplink);
+  * ``events``    — vectorized arrival/escalation event queues;
+  * ``scheduler`` — fair uplink scheduling across streams;
+  * ``metrics``   — per-stream and aggregate serving metrics.
+
+See docs/serving.md for the event-queue model and scheduler knobs.
+"""
+from repro.serving.engine import CascadeServer, MultiStreamServer, ServeConfig
+from repro.serving.events import ArrivalSchedule, EscalationBatch, select_escalations
+from repro.serving.metrics import AggregateMetrics, ServeMetrics, jain_index
+from repro.serving.scheduler import FairScheduler
+
+__all__ = [
+    "CascadeServer",
+    "MultiStreamServer",
+    "ServeConfig",
+    "ArrivalSchedule",
+    "EscalationBatch",
+    "select_escalations",
+    "AggregateMetrics",
+    "ServeMetrics",
+    "jain_index",
+    "FairScheduler",
+]

@@ -1,6 +1,6 @@
-"""CBO serving engine: deadline-aware two-tier cascade over a request stream.
+"""CBO serving engines: deadline-aware two-tier cascade over request streams.
 
-The control loop per batch:
+Single-stream control loop (``CascadeServer``, paper §IV-D) per batch:
   1. fast tier classifies the batch (int8 "NPU" model) — instant answers;
   2. calibrated confidences go to the AdaptiveController (Algorithm 1),
      which returns (theta, resolution, capacity) from current bandwidth;
@@ -8,22 +8,35 @@ The control loop per batch:
   4. replies that would land after the frame's deadline are *dropped* and
      the fast-tier answer stands — the paper's fallback, which doubles as
      straggler mitigation (a slow/failed slow-tier node degrades accuracy,
-     never correctness or latency).
+     never correctness or latency);
+  5. planned offloads are consumed from the controller backlog (they left
+     the device) so they are never re-planned.
+
+``MultiStreamServer`` generalizes this to N concurrent client streams
+sharing ONE uplink: a vectorized event queue (``serving/events.py``)
+replaces the per-frame Python loop, a fair scheduler
+(``serving/scheduler.py``) decides the uplink order across streams, each
+stream keeps its own AdaptiveController/bandwidth estimate, and the
+low-confidence frames of every stream are aggregated into one slow-tier
+batch per round (``core.cascade.slow_pass_multires``). With n_streams=1 it
+reproduces ``CascadeServer`` within tie-breaking noise (bench_multistream
+checks this).
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Optional
 
 import numpy as np
 
-import jax
 import jax.numpy as jnp
 
-from repro.core.cascade import cascade_classify
+from repro.core.cascade import cascade_classify, fast_pass, slow_pass_multires
 from repro.core.netsim import Uplink, png_size_model
 from repro.core.policy import AdaptiveController, BandwidthEstimator
+from repro.serving.events import ArrivalSchedule, EscalationBatch, select_escalations
+from repro.serving.metrics import AggregateMetrics, ServeMetrics
+from repro.serving.scheduler import FairScheduler
 
 
 @dataclass
@@ -36,34 +49,19 @@ class ServeConfig:
     fast_time: float = 0.020  # Table III: fast tier per frame
     calib_time: float = 0.008  # Table III: calibration
     server_time: float = 0.037  # Table III: slow tier per frame
+    size_of: Callable = png_size_model  # resolution -> upload bytes
 
 
-@dataclass
-class ServeMetrics:
-    n_frames: int = 0
-    n_offloaded: int = 0
-    n_deadline_miss: int = 0  # escalations that fell back
-    n_correct: int = 0
-    latencies: list = field(default_factory=list)
-
-    @property
-    def accuracy(self) -> float:
-        return self.n_correct / max(self.n_frames, 1)
-
-    @property
-    def offload_frac(self) -> float:
-        return self.n_offloaded / max(self.n_frames, 1)
-
-    def summary(self) -> dict:
-        lat = np.asarray(self.latencies) if self.latencies else np.zeros(1)
-        return {
-            "frames": self.n_frames,
-            "accuracy": round(self.accuracy, 4),
-            "offload_frac": round(self.offload_frac, 4),
-            "deadline_miss_frac": round(self.n_deadline_miss / max(self.n_frames, 1), 4),
-            "p50_latency_ms": round(float(np.percentile(lat, 50)) * 1e3, 2),
-            "p99_latency_ms": round(float(np.percentile(lat, 99)) * 1e3, 2),
-        }
+def _make_controller(cfg: ServeConfig, uplink: Uplink, share: float = 1.0) -> AdaptiveController:
+    return AdaptiveController(
+        resolutions=cfg.resolutions,
+        acc_server=cfg.acc_server,
+        deadline=cfg.deadline,
+        latency=uplink.latency,
+        server_time=cfg.server_time,
+        size_of=cfg.size_of,
+        bw=BandwidthEstimator(estimate_bps=uplink.bandwidth_bps * share),
+    )
 
 
 class CascadeServer:
@@ -74,15 +72,7 @@ class CascadeServer:
         self.slow_forward = slow_forward
         self.calibrate = calibrate
         self.uplink = uplink
-        self.controller = AdaptiveController(
-            resolutions=cfg.resolutions,
-            acc_server=cfg.acc_server,
-            deadline=cfg.deadline,
-            latency=uplink.latency,
-            server_time=cfg.server_time,
-            size_of=png_size_model,
-            bw=BandwidthEstimator(estimate_bps=uplink.bandwidth_bps),
-        )
+        self.controller = _make_controller(cfg, uplink)
         self.metrics = ServeMetrics()
 
     def process_stream(self, frames: np.ndarray, labels: Optional[np.ndarray] = None) -> ServeMetrics:
@@ -90,11 +80,12 @@ class CascadeServer:
         cfg = self.cfg
         gamma = 1.0 / cfg.frame_rate
         B = cfg.batch_size
+        t_fast = cfg.fast_time + cfg.calib_time
         n = len(frames) - len(frames) % B
         for start in range(0, n, B):
             batch = jnp.asarray(frames[start : start + B])
             arrivals = (start + np.arange(B)) * gamma
-            t_done_fast = arrivals + cfg.fast_time + cfg.calib_time
+            t_done_fast = arrivals + t_fast
 
             # plan from current backlog + bandwidth estimate
             plan = self.controller.plan(now=float(arrivals[0]))
@@ -111,24 +102,156 @@ class CascadeServer:
             preds = np.asarray(out.preds)
             fast_preds = np.asarray(out.fast_preds)
 
-            # simulate the uplink for escalated frames; late replies fall back
+            # simulate the shared uplink for the whole round at once;
+            # late replies fall back to the fast answer
+            esc = np.flatnonzero(escalated)
+            payloads = np.full(len(esc), cfg.size_of(res))
+            lands = self.uplink.transmit_batch(payloads, t_done_fast[esc])
+            for k in range(len(esc)):
+                self.controller.bw.observe(
+                    payloads[k],
+                    lands[k] - t_done_fast[esc[k]] - self.uplink.latency - self.uplink.server_time,
+                )
+            ok = lands <= arrivals[esc] + cfg.deadline
             final = fast_preds.copy()
-            for i in range(B):
+            final[esc[ok]] = preds[esc[ok]]
+
+            # backlog bookkeeping: planned offloads left the device — consume
+            # them (the re-planning bug), and this batch's escalated frames
+            # never enter the backlog at all
+            self.controller.consume(i for i, _ in plan.offloads)
+            for i in np.flatnonzero(~escalated):
                 self.controller.add_frame(float(arrivals[i]), float(conf[i]))
-                if not escalated[i]:
-                    self.metrics.latencies.append(cfg.fast_time + cfg.calib_time)
-                    continue
-                payload = png_size_model(res)
-                t_land = self.uplink.transmit(payload, float(t_done_fast[i]))
-                self.controller.bw.observe(payload, t_land - float(t_done_fast[i]) - self.uplink.latency - self.uplink.server_time)
-                if t_land <= arrivals[i] + cfg.deadline:
-                    final[i] = preds[i]
-                    self.metrics.n_offloaded += 1
-                    self.metrics.latencies.append(t_land - arrivals[i])
-                else:  # straggler / over-deadline: keep the fast answer
-                    self.metrics.n_deadline_miss += 1
-                    self.metrics.latencies.append(cfg.deadline)
-            self.metrics.n_frames += B
-            if labels is not None:
-                self.metrics.n_correct += int((final == labels[start : start + B]).sum())
+
+            lat = np.full(B, t_fast)
+            lat[esc] = np.where(ok, lands - arrivals[esc], cfg.deadline)
+            n_correct = int((final == labels[start : start + B]).sum()) if labels is not None else 0
+            self.metrics.update_batch(B, int(ok.sum()), int((~ok).sum()), n_correct, lat)
+        return self.metrics
+
+
+class MultiStreamServer:
+    """N concurrent client streams sharing one uplink and one slow tier.
+
+    Per round: one batched fast-tier call over all streams' frames, one
+    Algorithm-1 plan per stream, one vectorized escalation gate, one fair
+    uplink schedule, one batched slow-tier call over the cross-stream
+    escalations, and vectorized deadline/metric accounting.
+    """
+
+    def __init__(self, cfg: ServeConfig, fast_forward: Callable, slow_forward: Callable,
+                 calibrate: Callable, uplink: Uplink, n_streams: int,
+                 scheduler: Optional[FairScheduler] = None, stagger: bool = True):
+        if n_streams < 1:
+            raise ValueError("n_streams must be >= 1")
+        self.cfg = cfg
+        self.fast_forward = fast_forward
+        self.slow_forward = slow_forward
+        self.calibrate = calibrate
+        self.uplink = uplink
+        self.n_streams = n_streams
+        self.stagger = stagger
+        self.scheduler = scheduler or FairScheduler("round_robin")
+        # optimistic prior: every stream starts assuming the full link (as the
+        # paper's single device does). A pessimistic 1/N prior can deadlock —
+        # if B/N makes every offload look infeasible, no stream transmits, so
+        # no stream ever *observes* bandwidth and the estimate never recovers.
+        # Optimism self-corrects: early over-offloading shows up as queueing
+        # in the observed transfer times and the EWMAs back off to the
+        # contended share.
+        self.controllers = [_make_controller(cfg, uplink) for _ in range(n_streams)]
+        self.metrics = AggregateMetrics.for_streams(n_streams, uplink=uplink)
+
+    def process_streams(self, frames: np.ndarray,
+                        labels: Optional[np.ndarray] = None) -> AggregateMetrics:
+        """Replay S frame streams; ``frames`` is (S, N, H, W, C), ``labels`` (S, N)."""
+        cfg = self.cfg
+        S = self.n_streams
+        if frames.shape[0] != S:
+            raise ValueError(f"expected {S} streams, got frames.shape[0]={frames.shape[0]}")
+        B = cfg.batch_size
+        t_fast = cfg.fast_time + cfg.calib_time
+        resolutions = np.asarray(cfg.resolutions)
+        schedule = ArrivalSchedule.interleaved(S, frames.shape[1], cfg.frame_rate,
+                                              cfg.deadline, stagger=self.stagger)
+        # horizon over *simulated* frames only — rounds() trims the trailing
+        # partial batch, and utilization must not be diluted by unsimulated time
+        n_sim = frames.shape[1] - frames.shape[1] % B
+        self.metrics.wall_time = (
+            float(schedule.arrival[:, :n_sim].max()) + cfg.deadline if n_sim else 0.0
+        )
+
+        for start, arr in schedule.rounds(B):
+            flat = jnp.asarray(frames[:, start : start + B].reshape(S * B, *frames.shape[2:]))
+            fp, cf = fast_pass(self.fast_forward, self.calibrate, flat)
+            fast_preds = np.asarray(fp).reshape(S, B)
+            conf = np.asarray(cf).reshape(S, B)
+            t_ready = arr + t_fast  # (S, B)
+
+            # control plane: one Algorithm-1 plan per stream
+            theta = np.zeros(S)
+            cap = np.ones(S, dtype=np.int64)
+            res_idx = np.zeros(S, dtype=np.int64)
+            plans = []
+            for s, ctrl in enumerate(self.controllers):
+                plan = ctrl.plan(now=float(arr[s, 0]))
+                plans.append(plan)
+                cap[s] = max(len(plan.offloads), 1)
+                theta[s] = plan.theta if plan.offloads else 0.0
+                res_idx[s] = plan.resolution
+
+            # vectorized gate + gathered cross-stream escalation batch
+            s_idx, slot_idx = select_escalations(conf, theta, cap)
+            res_px = resolutions[res_idx[s_idx]]
+            esc = EscalationBatch(
+                stream=s_idx, slot=slot_idx,
+                t_ready=t_ready[s_idx, slot_idx],
+                payload=np.asarray([cfg.size_of(int(r)) for r in res_px], dtype=np.float64),
+                res=res_px,
+            )
+
+            # one batched slow-tier call for every stream's escalations
+            if len(esc):
+                gathered = jnp.take(flat, jnp.asarray(s_idx * B + slot_idx), axis=0)
+                slow_preds = np.asarray(slow_pass_multires(self.slow_forward, gathered, esc.res))
+            else:
+                slow_preds = np.zeros(0, dtype=fast_preds.dtype)
+
+            # fair uplink schedule, then one vectorized transmit for the round
+            order = self.scheduler.order(esc.stream, esc.t_ready,
+                                         cost=esc.payload / self.uplink.bandwidth_bps)
+            q = esc.permuted(order)
+            slow_q = slow_preds[order]
+            lands = self.uplink.transmit_batch(q.payload, q.t_ready)
+            ok = lands <= arr[q.stream, q.slot] + cfg.deadline
+
+            final = fast_preds.copy()
+            final[q.stream[ok], q.slot[ok]] = slow_q[ok]
+
+            # per-stream bandwidth observations, in transmission order
+            for k in range(len(q)):
+                self.controllers[q.stream[k]].bw.observe(
+                    q.payload[k],
+                    lands[k] - q.t_ready[k] - self.uplink.latency - self.uplink.server_time,
+                )
+
+            # backlog bookkeeping per stream (same semantics as CascadeServer)
+            esc_mask = np.zeros((S, B), dtype=bool)
+            esc_mask[s_idx, slot_idx] = True
+            for s, ctrl in enumerate(self.controllers):
+                ctrl.consume(i for i, _ in plans[s].offloads)
+                for i in np.flatnonzero(~esc_mask[s]):
+                    ctrl.add_frame(float(arr[s, i]), float(conf[s, i]))
+
+            # vectorized metrics: latency per frame, counts per stream
+            lat = np.full((S, B), t_fast)
+            lat[q.stream[ok], q.slot[ok]] = lands[ok] - arr[q.stream[ok], q.slot[ok]]
+            lat[q.stream[~ok], q.slot[~ok]] = cfg.deadline
+            off_counts = np.bincount(q.stream[ok], minlength=S)
+            miss_counts = np.bincount(q.stream[~ok], minlength=S)
+            correct = ((final == labels[:, start : start + B]).sum(axis=1)
+                       if labels is not None else np.zeros(S, dtype=np.int64))
+            for s in range(S):
+                self.metrics[s].update_batch(B, off_counts[s], miss_counts[s],
+                                             int(correct[s]), lat[s])
         return self.metrics

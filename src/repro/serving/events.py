@@ -1,0 +1,98 @@
+"""Vectorized event model for multi-stream serving.
+
+Two struct-of-arrays event containers replace the per-frame Python loop the
+single-stream engine used:
+
+  * ``ArrivalSchedule`` — the (S, N) matrix of frame-arrival times for S
+    streams of N frames each, plus per-frame deadlines. Streams run at the
+    same frame rate but are phase-staggered (camera clocks are not
+    synchronized), so within a round the S*B arrivals interleave on the
+    shared uplink instead of landing as S simultaneous bursts.
+
+  * ``EscalationBatch`` — one round's gathered low-confidence frames across
+    every stream: (stream, slot, t_ready, payload, res) as flat
+    numpy arrays. The scheduler permutes it (uplink order), the uplink
+    transmits it in one ``transmit_batch`` call, and the engine scatters the
+    slow-tier answers back with boolean masks — no per-frame control flow.
+
+``select_escalations`` is the vectorized gate: for each stream s it picks
+the K_s lowest-confidence frames below theta_s, using one argsort over the
+whole (S, B) confidence matrix.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ArrivalSchedule:
+    arrival: np.ndarray  # (S, N) seconds
+    deadline: float  # per-frame window T
+
+    @classmethod
+    def interleaved(cls, n_streams: int, n_frames: int, frame_rate: float,
+                    deadline: float, stagger: bool = True) -> "ArrivalSchedule":
+        """S streams at the same rate; stream s phase-shifted by s*gamma/S."""
+        gamma = 1.0 / frame_rate
+        base = np.arange(n_frames, dtype=np.float64) * gamma  # (N,)
+        phase = (np.arange(n_streams, dtype=np.float64) * gamma / max(n_streams, 1)
+                 if stagger else np.zeros(n_streams))
+        return cls(arrival=phase[:, None] + base[None, :], deadline=float(deadline))
+
+    @property
+    def n_streams(self) -> int:
+        return self.arrival.shape[0]
+
+    @property
+    def n_frames(self) -> int:
+        return self.arrival.shape[1]
+
+    @property
+    def horizon(self) -> float:
+        """Last possible reply time: final arrival plus the deadline."""
+        return float(self.arrival.max()) + self.deadline
+
+    def rounds(self, batch_size: int):
+        """Yield (start_slot, arrivals_view (S, B)) per full round."""
+        n = self.n_frames - self.n_frames % batch_size
+        for start in range(0, n, batch_size):
+            yield start, self.arrival[:, start : start + batch_size]
+
+
+@dataclass
+class EscalationBatch:
+    """One round's cross-stream escalations, struct-of-arrays."""
+
+    stream: np.ndarray  # (E,) int — owning stream
+    slot: np.ndarray  # (E,) int — index within the round's batch
+    t_ready: np.ndarray  # (E,) when the frame is ready to transmit
+    payload: np.ndarray  # (E,) upload bytes at the planned resolution
+    res: np.ndarray  # (E,) int — planned upload resolution (pixels)
+
+    def __len__(self) -> int:
+        return len(self.stream)
+
+    def permuted(self, order: np.ndarray) -> "EscalationBatch":
+        return EscalationBatch(self.stream[order], self.slot[order],
+                               self.t_ready[order], self.payload[order], self.res[order])
+
+
+def select_escalations(conf_sb: np.ndarray, theta: np.ndarray, capacity: np.ndarray):
+    """Vectorized per-stream gate over an (S, B) confidence matrix.
+
+    For each stream s, select up to ``capacity[s]`` frames with
+    ``conf < theta[s]``, lowest confidence first — the same rule the jit
+    cascade's masked top-k applies, but across S streams at once.
+
+    Returns (stream_idx, slot_idx) flat arrays of the selected frames.
+    """
+    conf_sb = np.asarray(conf_sb)
+    theta = np.asarray(theta, dtype=np.float64).reshape(-1, 1)  # (S, 1)
+    cap = np.asarray(capacity, dtype=np.int64).reshape(-1, 1)
+    order = np.argsort(conf_sb, axis=1, kind="stable")  # ascending conf
+    gate_sorted = np.take_along_axis(conf_sb < theta, order, axis=1)
+    take = gate_sorted & (np.cumsum(gate_sorted, axis=1) <= cap)
+    s_idx, j_idx = np.nonzero(take)
+    return s_idx, order[s_idx, j_idx]

@@ -1,0 +1,138 @@
+"""Serving metrics: per-stream counters and multi-stream aggregation.
+
+``ServeMetrics`` is the single-stream record the original engine kept (and
+still keeps — it is re-exported from ``serving.engine`` for compatibility).
+``AggregateMetrics`` wraps one ``ServeMetrics`` per stream plus the shared
+uplink's contention counters, and adds the cross-stream views that only
+exist in the multi-stream regime: aggregate accuracy (frame-weighted),
+per-stream accuracy spread, and Jain's fairness index over per-stream
+offload counts.
+
+Semantics (documented in docs/serving.md):
+  * ``accuracy``            — frame-weighted over all streams;
+  * ``offload_frac``        — escalations whose reply landed in time;
+  * ``deadline_miss_frac``  — escalations that fell back to the fast answer;
+  * latencies               — per frame: fast path for locals, land time for
+                              offloads, clipped at the deadline for misses.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class ServeMetrics:
+    n_frames: int = 0
+    n_offloaded: int = 0
+    n_deadline_miss: int = 0  # escalations that fell back
+    n_correct: int = 0
+    latencies: list = field(default_factory=list)
+
+    @property
+    def accuracy(self) -> float:
+        return self.n_correct / max(self.n_frames, 1)
+
+    @property
+    def offload_frac(self) -> float:
+        return self.n_offloaded / max(self.n_frames, 1)
+
+    @property
+    def deadline_miss_frac(self) -> float:
+        return self.n_deadline_miss / max(self.n_frames, 1)
+
+    def update_batch(self, n_frames: int, n_offloaded: int, n_deadline_miss: int,
+                     n_correct: int, latencies) -> None:
+        """Vectorized-round update: fold one round's numpy results in."""
+        self.n_frames += int(n_frames)
+        self.n_offloaded += int(n_offloaded)
+        self.n_deadline_miss += int(n_deadline_miss)
+        self.n_correct += int(n_correct)
+        self.latencies.extend(float(x) for x in np.atleast_1d(latencies))
+
+    def summary(self) -> dict:
+        lat = np.asarray(self.latencies) if self.latencies else np.zeros(1)
+        return {
+            "frames": self.n_frames,
+            "accuracy": round(self.accuracy, 4),
+            "offload_frac": round(self.offload_frac, 4),
+            "deadline_miss_frac": round(self.deadline_miss_frac, 4),
+            "p50_latency_ms": round(float(np.percentile(lat, 50)) * 1e3, 2),
+            "p99_latency_ms": round(float(np.percentile(lat, 99)) * 1e3, 2),
+        }
+
+
+def jain_index(x) -> float:
+    """Jain's fairness index: 1.0 = perfectly even, 1/n = one stream hogs."""
+    x = np.asarray(x, dtype=np.float64)
+    if x.size == 0 or x.sum() <= 0:
+        return 1.0
+    return float(x.sum() ** 2 / (x.size * (x**2).sum()))
+
+
+@dataclass
+class AggregateMetrics:
+    per_stream: list  # list[ServeMetrics], index = stream id
+    uplink: object = None  # the shared Uplink (for contention counters)
+    wall_time: float = 0.0  # simulated horizon (last arrival + deadline)
+
+    @classmethod
+    def for_streams(cls, n_streams: int, uplink=None) -> "AggregateMetrics":
+        return cls(per_stream=[ServeMetrics() for _ in range(n_streams)], uplink=uplink)
+
+    def __getitem__(self, s: int) -> ServeMetrics:
+        return self.per_stream[s]
+
+    # -- aggregate (frame-weighted) views -------------------------------- #
+    @property
+    def n_frames(self) -> int:
+        return sum(m.n_frames for m in self.per_stream)
+
+    @property
+    def n_offloaded(self) -> int:
+        return sum(m.n_offloaded for m in self.per_stream)
+
+    @property
+    def n_deadline_miss(self) -> int:
+        return sum(m.n_deadline_miss for m in self.per_stream)
+
+    @property
+    def accuracy(self) -> float:
+        return sum(m.n_correct for m in self.per_stream) / max(self.n_frames, 1)
+
+    @property
+    def offload_frac(self) -> float:
+        return self.n_offloaded / max(self.n_frames, 1)
+
+    @property
+    def deadline_miss_frac(self) -> float:
+        return self.n_deadline_miss / max(self.n_frames, 1)
+
+    @property
+    def offload_fairness(self) -> float:
+        """Jain index over per-stream successful-offload counts."""
+        return jain_index([m.n_offloaded for m in self.per_stream])
+
+    def summary(self) -> dict:
+        lats = np.asarray([x for m in self.per_stream for x in m.latencies]) \
+            if any(m.latencies for m in self.per_stream) else np.zeros(1)
+        acc = [m.accuracy for m in self.per_stream]
+        out = {
+            "streams": len(self.per_stream),
+            "frames": self.n_frames,
+            "accuracy": round(self.accuracy, 4),
+            "offload_frac": round(self.offload_frac, 4),
+            "deadline_miss_frac": round(self.deadline_miss_frac, 4),
+            "p50_latency_ms": round(float(np.percentile(lats, 50)) * 1e3, 2),
+            "p99_latency_ms": round(float(np.percentile(lats, 99)) * 1e3, 2),
+            "stream_acc_min": round(float(min(acc)), 4),
+            "stream_acc_max": round(float(max(acc)), 4),
+            "offload_fairness": round(self.offload_fairness, 4),
+        }
+        if self.uplink is not None:
+            out["uplink_queued_s"] = round(float(self.uplink.queued_seconds), 4)
+            out["uplink_busy_s"] = round(float(self.uplink.busy_seconds), 4)
+            if self.wall_time > 0:
+                out["uplink_utilization"] = round(self.uplink.utilization(self.wall_time), 4)
+        return out

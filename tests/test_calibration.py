@@ -1,7 +1,7 @@
 """Calibration (paper §III-B, Table I): metrics + the three calibrators."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.calibration import (
     IsotonicCalibrator,

@@ -1,7 +1,7 @@
 """CBO scheduling (paper §IV): optimal DP vs brute force, Algorithm 1 props."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.cbo import Env, Frame, brute_force, cbo_plan, optimal_schedule
 

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core.confidence import margin, max_softmax, neg_entropy, sequence_confidence
 from repro.data.pipeline import DeterministicPipeline, PipelineConfig, token_batch_fn

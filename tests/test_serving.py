@@ -44,6 +44,14 @@ def test_serving_improves_over_fast_tier_with_bandwidth():
     assert m.offload_frac > 0
 
 
+def test_serving_dead_uplink_equals_fast_tier():
+    """bw = 0 exactly: the planner must say 'all local', not divide by zero."""
+    imgs, labels = _stream()
+    srv = _server(bw_mbps=0.0)
+    m = srv.process_stream(imgs, labels)
+    assert m.offload_frac == 0.0 and m.n_deadline_miss == 0
+
+
 def test_serving_no_bandwidth_equals_fast_tier():
     imgs, labels = _stream()
     srv = _server(bw_mbps=0.001)
@@ -61,6 +69,26 @@ def test_deadline_misses_fall_back_not_crash():
     m = srv.process_stream(imgs, labels)
     assert m.n_offloaded == 0  # all replies late -> straggler fallback
     assert max(m.latencies) <= srv.cfg.deadline + 1e-9
+
+
+def test_offloaded_frames_leave_the_backlog():
+    """Regression: escalated frames must not linger in the controller backlog
+    and get re-planned every batch (consume() was never called). A long
+    deadline keeps the expiry pruning in plan() from masking the leak."""
+    imgs, labels = _stream()
+    cfg = ServeConfig(resolutions=(4, 8), acc_server=(0.7, 0.99), batch_size=16,
+                      frame_rate=30.0, deadline=5.0)
+    fast, slow = _tiers()
+    up = Uplink(bandwidth_bps=mbps(50.0), latency=0.05, server_time=cfg.server_time)
+    srv = CascadeServer(cfg, fast, slow, lambda s: s, up)
+    m = srv.process_stream(imgs, labels)
+    n_escalated = m.n_offloaded + m.n_deadline_miss
+    assert n_escalated > 0
+    # pre-fix the backlog held every frame (escalated included); post-fix the
+    # escalated frames never enter it and planned offloads are consumed
+    assert len(srv.controller.backlog) <= m.n_frames - n_escalated
+    backlog_arrivals = {f.arrival for f in srv.controller.backlog}
+    assert len(backlog_arrivals) == len(srv.controller.backlog)  # no duplicates
 
 
 def test_uplink_serializes_transfers():
