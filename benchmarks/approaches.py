@@ -2,8 +2,11 @@
 Compress / CBO-w/o-calibration / CBO / Optimal.
 
 The replay precomputes both tiers' predictions (slow tier at every ladder
-resolution), then simulates the serial uplink + deadlines per approach and
-scores *realized* accuracy — the paper's methodology, offline.
+resolution) into a ``Trace``; the uplink/deadline simulation itself is the
+*unified* policy replay engine (``repro.policy.replay_trace``) — every
+approach here is just a registered policy name plus replay-physics knobs
+(fallback predictions, local-tier occupancy, planning cadence).  Adding an
+approach means registering a policy, not writing another simulation loop.
 """
 from __future__ import annotations
 
@@ -14,11 +17,11 @@ import numpy as np
 
 from benchmarks import common as C
 from repro.core.cascade import degrade_resolution
-from repro.core.cbo import Env, Frame, cbo_plan, optimal_schedule
 from repro.core.confidence import max_softmax
-from repro.core.netsim import Uplink, mbps, png_size_model
+from repro.core.netsim import mbps, png_size_model
 from repro.models import api
 from repro.models.transformer import ParallelPlan
+from repro.policy import Env, make_policy, replay_trace
 
 FAST_TIME = 0.020  # Table III (s/frame): NPU tier
 CALIB_TIME = 0.008  # Table III: calibration
@@ -113,133 +116,76 @@ class NetCfg:
         return mbps(self.bandwidth_mbps)
 
 
-def _acc(trace: Trace, results: np.ndarray) -> float:
-    return float((results == trace.labels).mean())
+# --------------------------- unified replay ------------------------------- #
+
+
+def _replay(trace: Trace, net: NetCfg, policy, *, conf=None, acc_server=None,
+            local_pred=None, local_time: float = 0.0, **kw) -> float:
+    """Run one policy through the shared replay engine; returns accuracy."""
+    env = Env(bandwidth=net.bw, latency=net.latency, server_time=SERVER_TIME,
+              deadline=net.deadline,
+              acc_server=acc_server if acc_server is not None else trace.plan_acc_by_res)
+    result = replay_trace(
+        policy,
+        conf=conf if conf is not None else trace.conf_cal,
+        slow_pred=np.stack([trace.slow_pred_by_res[r] for r in C.RESOLUTIONS]),
+        sizes=[trace.sizes[r] for r in C.RESOLUTIONS],
+        env=env,
+        frame_interval=net.gamma,
+        local_pred=local_pred,
+        local_time=local_time,
+        **kw,
+    )
+    return result.accuracy(trace.labels)
+
+
+def _pop_acc(trace: Trace) -> tuple:
+    """Population server accuracy per resolution (the greedy rules' table)."""
+    return tuple(float((trace.slow_pred_by_res[r] == trace.labels).mean())
+                 for r in C.RESOLUTIONS)
 
 
 # ------------------------------ approaches --------------------------------- #
 
 
 def run_local(trace: Trace, net: NetCfg) -> float:
-    return _acc(trace, trace.fast_pred)
+    return _replay(trace, net, make_policy("local"), local_pred=trace.fast_pred)
 
 
 def run_server(trace: Trace, net: NetCfg) -> float:
-    """All frames offloaded; resolution capped so transmission fits both the
-    frame interval (keep up with the stream) and the per-frame deadline."""
-    tx_budget = min(net.gamma, net.deadline - SERVER_TIME - net.latency)
-    res_ok = [r for r in C.RESOLUTIONS if trace.sizes[r] / max(net.bw, 1e-9) <= tx_budget]
-    results = np.full(len(trace), -1)  # unanswered = wrong
-    if not res_ok:
-        return _acc(trace, results)
-    r = max(res_ok)
-    busy = 0.0
-    for i in range(len(trace)):
-        arr = i * net.gamma
-        busy = max(busy, arr) + trace.sizes[r] / net.bw
-        if busy + SERVER_TIME + net.latency <= arr + net.deadline:
-            results[i] = trace.slow_pred_by_res[r][i]
-    return _acc(trace, results)
-
-
-def _greedy_offload(trace: Trace, net: NetCfg, local_pred: np.ndarray, local_time: float,
-                    local_acc: float) -> float:
-    """FastVA/Compress-style: offload when the best deadline-feasible
-    resolution beats the local tier's (population) accuracy; no per-frame
-    confidence. Rest handled locally if the local tier keeps up."""
-    pop_acc = {r: float((trace.slow_pred_by_res[r] == trace.labels).mean()) for r in C.RESOLUTIONS}
-    results = local_pred.copy()
-    busy = 0.0
-    local_busy = 0.0
-    for i in range(len(trace)):
-        arr = i * net.gamma
-        done = False
-        for r in sorted(C.RESOLUTIONS, reverse=True):
-            if pop_acc[r] <= local_acc:
-                break  # lower resolutions are worse than answering locally
-            t_land = max(busy, arr) + trace.sizes[r] / net.bw + SERVER_TIME + net.latency
-            if t_land <= arr + net.deadline:
-                busy = max(busy, arr) + trace.sizes[r] / net.bw
-                results[i] = trace.slow_pred_by_res[r][i]
-                done = True
-                break
-        if not done:
-            if local_busy <= arr:  # local tier free: process
-                local_busy = arr + local_time
-            else:  # load shedding: skip frames while the local tier is busy
-                results[i] = -1
-    return _acc(trace, results)
+    """All frames offloaded; unanswered frames score wrong (no fallback)."""
+    return _replay(trace, net, make_policy("server", frame_interval=net.gamma),
+                   local_pred=None)
 
 
 def run_fastva(trace: Trace, net: NetCfg) -> float:
-    return _greedy_offload(trace, net, trace.fast_pred, FAST_TIME, trace.local_acc_mean)
+    return _replay(trace, net, make_policy("greedy-rate", local_acc=trace.local_acc_mean),
+                   acc_server=_pop_acc(trace), local_pred=trace.fast_pred,
+                   local_time=FAST_TIME)
 
 
 def run_compress(trace: Trace, net: NetCfg) -> float:
-    return _greedy_offload(trace, net, trace.fast_fp_pred, COMPRESS_TIME,
-                           float((trace.fast_fp_pred == trace.labels).mean()))
-
-
-def _run_cbo(trace: Trace, net: NetCfg, conf: np.ndarray, replan_every: int = 1) -> float:
-    """Algorithm 1 deployment loop: re-plan over the backlog, offload the
-    planned set, deadline-missed replies fall back to the fast answer.
-    Planning table = calibration-split A^o_r conditioned on low confidence."""
-    env = Env(bandwidth=net.bw, latency=net.latency, server_time=SERVER_TIME,
-              deadline=net.deadline, acc_server=trace.plan_acc_by_res)
-    results = trace.fast_pred.copy()
-    busy = 0.0
-    backlog: list[int] = []
-    for i in range(len(trace)):
-        arr = i * net.gamma
-        backlog.append(i)
-        backlog = [j for j in backlog if j * net.gamma + net.deadline > max(arr, busy)]
-        if i % replan_every:
-            continue
-        frames = [Frame(arrival=j * net.gamma, conf=float(conf[j]),
-                        sizes=tuple(trace.sizes[r] for r in C.RESOLUTIONS)) for j in backlog]
-        plan = cbo_plan(frames, env, now=max(busy, arr))
-        done = set()
-        for bi, r in plan.offloads:
-            j = backlog[bi]
-            res = C.RESOLUTIONS[r]
-            t_land = max(busy, j * net.gamma) + trace.sizes[res] / net.bw + SERVER_TIME + net.latency
-            if t_land <= j * net.gamma + net.deadline:
-                busy = max(busy, j * net.gamma) + trace.sizes[res] / net.bw
-                results[j] = trace.slow_pred_by_res[res][j]
-            done.add(j)  # planned but late -> fast answer stands (fallback)
-        backlog = [j for j in backlog if j not in done]
-    return _acc(trace, results)
+    fp_acc = float((trace.fast_fp_pred == trace.labels).mean())
+    return _replay(trace, net, make_policy("greedy-rate", local_acc=fp_acc),
+                   acc_server=_pop_acc(trace), local_pred=trace.fast_fp_pred,
+                   local_time=COMPRESS_TIME)
 
 
 def run_cbo(trace: Trace, net: NetCfg) -> float:
-    return _run_cbo(trace, net, trace.conf_cal)
+    return _replay(trace, net, make_policy("cbo", max_backlog=None),
+                   conf=trace.conf_cal, local_pred=trace.fast_pred)
 
 
 def run_cbo_wo(trace: Trace, net: NetCfg) -> float:
-    return _run_cbo(trace, net, trace.conf_raw)
+    return _replay(trace, net, make_policy("cbo", max_backlog=None),
+                   conf=trace.conf_raw, local_pred=trace.fast_pred)
 
 
 def run_optimal(trace: Trace, net: NetCfg) -> float:
-    """Offline optimal on the full trace (replay, as in the paper)."""
-    env = Env(bandwidth=net.bw, latency=net.latency, server_time=SERVER_TIME,
-              deadline=net.deadline, acc_server=trace.plan_acc_by_res)
-    # chunk the trace so the DP state stays small (windows of 60 frames)
-    results = trace.fast_pred.copy()
-    busy = 0.0
-    W = 60
-    for s in range(0, len(trace), W):
-        idx = list(range(s, min(s + W, len(trace))))
-        frames = [Frame(arrival=j * net.gamma, conf=float(trace.conf_cal[j]),
-                        sizes=tuple(trace.sizes[r] for r in C.RESOLUTIONS)) for j in idx]
-        plan = optimal_schedule(frames, env)
-        for bi, r in sorted(plan.offloads):
-            j = idx[bi]
-            res = C.RESOLUTIONS[r]
-            t_land = max(busy, j * net.gamma) + trace.sizes[res] / net.bw + SERVER_TIME + net.latency
-            if t_land <= j * net.gamma + net.deadline:
-                busy = max(busy, j * net.gamma) + trace.sizes[res] / net.bw
-                results[j] = trace.slow_pred_by_res[res][j]
-    return _acc(trace, results)
+    """Offline optimal, planned over 60-frame windows (replay, as in the
+    paper) so the DP state stays small."""
+    return _replay(trace, net, make_policy("optimal"), conf=trace.conf_cal,
+                   local_pred=trace.fast_pred, window=60)
 
 
 APPROACHES = {

@@ -21,6 +21,7 @@ def main() -> None:
         bench_multistream,
         bench_network,
         bench_optimal_gap,
+        bench_policy_planner,
         bench_reliability,
         bench_resolution,
         bench_threshold_sweep,
@@ -33,7 +34,8 @@ def main() -> None:
     results = {}
     for mod in (bench_calibration, bench_reliability, bench_threshold_sweep,
                 bench_resolution, bench_tiers, bench_kernels,
-                bench_network, bench_optimal_gap, bench_multistream):
+                bench_network, bench_optimal_gap, bench_policy_planner,
+                bench_multistream):
         name = mod.__name__.split(".")[-1]
         print(f"=== {name} ===", flush=True)
         t = time.time()

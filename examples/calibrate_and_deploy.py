@@ -16,8 +16,8 @@ def main():
     from benchmarks.common import RESOLUTIONS, build_stack
 
     from repro.core.calibration import IsotonicCalibrator, PlattCalibrator, ece, mce
-    from repro.core.cbo import Env, Frame, cbo_plan
     from repro.core.netsim import mbps, png_size_model
+    from repro.policy import Env, Frame, make_policy
 
     stack = build_stack()
     conf, correct = stack.calib["conf"], stack.calib["correct"]
@@ -30,7 +30,8 @@ def main():
         c = np.asarray(cal(conf[n:]))
         print(f"{name:14s} {ece(c, correct[n:]):7.3f} {mce(c, correct[n:]):7.3f}")
 
-    # deploy: plan the next offloads from a backlog of 8 frames
+    # deploy: plan the next offloads from a backlog of 8 frames through the
+    # policy plane (any registered policy works here — docs/policies.md)
     platt = PlattCalibrator.fit(conf, correct)
     cal = np.asarray(platt(conf[:8]))
     frames = [Frame(arrival=i / 30.0, conf=float(cal[i]),
@@ -38,7 +39,9 @@ def main():
               for i in range(8)]
     env = Env(bandwidth=mbps(5.0), latency=0.1, server_time=0.037, deadline=0.2,
               acc_server=stack.acc_server_by_res)
-    plan = cbo_plan(frames, env)
+    policy = make_policy("cbo")
+    policy.observe(frames)
+    plan = policy.plan(0.0, env)
     print("\n=== CBO plan @5 Mbps ===")
     print(f"theta={plan.theta:.3f}  resolution={RESOLUTIONS[plan.resolution]}px")
     print(f"planned offloads (frame, res): {[(i, RESOLUTIONS[r]) for i, r in plan.offloads]}")

@@ -24,6 +24,9 @@ def main():
     ap.add_argument("--latency", type=float, default=0.1)
     ap.add_argument("--frames", type=int, default=240, help="frames per stream")
     ap.add_argument("--scheduler", choices=("round_robin", "fifo"), default="round_robin")
+    ap.add_argument("--policy", default="cbo",
+                    help="offload policy name, or 'name0,name1,...' cycled "
+                         "across streams for a heterogeneous fleet")
     ap.add_argument("--synthetic", action="store_true",
                     help="tiny synthetic tiers (no training) instead of the trained stack")
     args = ap.parse_args()
@@ -62,12 +65,15 @@ def main():
         acc_note = f"  (fast tier alone: {stack.acc_fast:.3f}; slow ceiling: {stack.acc_slow:.3f})"
 
     uplink = Uplink(bandwidth_bps=mbps(args.bw), latency=args.latency, server_time=cfg.server_time)
+    names = args.policy.split(",")
+    policy = names[0] if len(names) == 1 else (lambda s: names[s % len(names)])
     server = MultiStreamServer(cfg, fast, slow, calibrate, uplink, n_streams=args.streams,
-                               scheduler=FairScheduler(args.scheduler))
+                               scheduler=FairScheduler(args.scheduler), policy=policy)
     metrics = server.process_streams(frames, labels)
 
-    print(f"\n=== CBO multi-client serving: {args.streams} streams @ {args.bw} Mbps shared, "
-          f"{args.fps} fps, L={args.latency*1e3:.0f} ms, {args.scheduler} ===")
+    print(f"\n=== {args.policy} multi-client serving: {args.streams} streams @ "
+          f"{args.bw} Mbps shared, {args.fps} fps, L={args.latency*1e3:.0f} ms, "
+          f"{args.scheduler} ===")
     for k, v in metrics.summary().items():
         print(f"  {k:22s} {v}")
     if acc_note:

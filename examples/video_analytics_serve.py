@@ -19,6 +19,8 @@ def main():
     ap.add_argument("--fps", type=float, default=30.0)
     ap.add_argument("--latency", type=float, default=0.1)
     ap.add_argument("--frames", type=int, default=480)
+    ap.add_argument("--policy", default="cbo",
+                    help="offload policy registry name (see docs/policies.md)")
     args = ap.parse_args()
 
     import os
@@ -47,11 +49,13 @@ def main():
         slow_forward=lambda x: sh.forward(stack.slow_params, x),
         calibrate=stack.platt,
         uplink=uplink,
+        policy=args.policy,
     )
     frames = stack.test["frames"][: args.frames]
     labels = stack.test["labels"][: args.frames]
     metrics = server.process_stream(frames, labels)
-    print(f"\n=== CBO serving @ {args.bw} Mbps, {args.fps} fps, L={args.latency*1e3:.0f} ms ===")
+    print(f"\n=== {args.policy} serving @ {args.bw} Mbps, {args.fps} fps, "
+          f"L={args.latency*1e3:.0f} ms ===")
     for k, v in metrics.summary().items():
         print(f"  {k:22s} {v}")
     print(f"  (fast tier alone: {stack.acc_fast:.3f}; slow tier ceiling: {stack.acc_slow:.3f})")

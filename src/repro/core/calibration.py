@@ -101,8 +101,8 @@ class PlattCalibrator:
 
 @dataclass
 class IsotonicCalibrator:
-    thresholds: np.ndarray = None  # sorted score knots
-    values: np.ndarray = None  # monotone fitted values
+    thresholds: np.ndarray | None = None  # sorted score knots
+    values: np.ndarray | None = None  # monotone fitted values
 
     def __call__(self, s):
         idx = jnp.clip(jnp.searchsorted(jnp.asarray(self.thresholds), jnp.asarray(s, F32), side="right") - 1, 0, len(self.values) - 1)
@@ -169,13 +169,45 @@ class TemperatureCalibrator:
         return TemperatureCalibrator(float(jnp.exp(log_t)))
 
 
+@dataclass
+class ScoreTemperatureCalibrator:
+    """Scores→scores adapter for temperature scaling.
+
+    ``TemperatureCalibrator`` consumes logits, which the serving engines
+    (and every other calibrator) never see — they calibrate max-softmax
+    *scores*.  This wrapper applies the fitted temperature to the
+    equivalent two-class logit gap: s = sigmoid(z) ⇒ sigmoid(z / T).
+    Exact for binary problems; the standard monotone approximation
+    otherwise.  Makes temperature scaling interchangeable with Platt /
+    isotonic wherever a score→score map is expected.
+    """
+
+    temperature: float = 1.0
+
+    def __call__(self, s):
+        p = jnp.clip(jnp.asarray(s, F32), 1e-6, 1.0 - 1e-6)
+        z = jnp.log(p) - jnp.log1p(-p)
+        return jax.nn.sigmoid(z / self.temperature)
+
+    @staticmethod
+    def fit(logits, labels, n_iter: int = 50) -> "ScoreTemperatureCalibrator":
+        t = TemperatureCalibrator.fit(logits, labels, n_iter=n_iter)
+        return ScoreTemperatureCalibrator(t.temperature)
+
+
 def fit_all(scores, correct, logits=None, labels=None) -> dict:
-    """Fit every calibrator; returns {name: calibrator} (paper Table I set)."""
+    """Fit every calibrator; returns {name: calibrator} (paper Table I set).
+
+    Every entry has the uniform signature the engines expect: a callable
+    mapping confidence scores → calibrated scores.  Temperature scaling
+    (logit-based) is wrapped in ``ScoreTemperatureCalibrator`` so it is
+    interchangeable with the score-based calibrators.
+    """
     out = {
         "uncalibrated": lambda s: jnp.asarray(s, F32),
         "platt": PlattCalibrator.fit(scores, correct),
         "isotonic": IsotonicCalibrator.fit(scores, correct),
     }
     if logits is not None and labels is not None:
-        out["temperature"] = TemperatureCalibrator.fit(logits, labels)
+        out["temperature"] = ScoreTemperatureCalibrator.fit(logits, labels)
     return out

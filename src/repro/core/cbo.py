@@ -15,153 +15,23 @@ time-windowed solution graph; the online Algorithm 1 re-plans over the
 backlog of locally-processed frames sorted by confidence and emits
 (theta, r°) — the threshold and resolution for the next offload.
 
-This module is the host-side control plane (numpy; O(k²m) as in the paper).
-The data plane (batched masked escalation in JAX) is ``core/cascade.py``.
+This module is a compatibility facade: the planners and their value types
+now live in ``repro.policy`` (the pluggable decision plane — vectorized
+struct-of-arrays frontier DP in ``repro/policy/frontier.py``) and are
+re-exported here under their historical names.  The brute-force oracle
+(tests only) remains local.  The data plane (batched masked escalation in
+JAX) is ``core/cascade.py``.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Callable, Optional, Sequence
+from typing import Sequence
 
 import numpy as np
 
+from repro.policy.frontier import cbo_plan, optimal_schedule
+from repro.policy.types import Env, Frame, Plan
 
-@dataclass(frozen=True)
-class Frame:
-    arrival: float  # seconds
-    conf: float  # calibrated confidence = expected fast-tier accuracy
-    sizes: tuple[float, ...]  # payload bytes per resolution (ascending res)
-
-
-@dataclass(frozen=True)
-class Env:
-    bandwidth: float  # uplink bytes/s
-    latency: float  # one-way-ish network latency L (s)
-    server_time: float  # T^o (s)
-    deadline: float  # T (s), per-frame window
-    acc_server: tuple[float, ...]  # A^o_r per resolution (ascending res)
-
-
-@dataclass
-class Plan:
-    """Result of a CBO planning pass."""
-
-    theta: float  # confidence threshold for offloading
-    resolution: int  # r° — resolution index for the next offload
-    offloads: list[tuple[int, int]]  # (frame index, resolution index)
-    total_gain: float  # sum of (A^o_r - p_i) over planned offloads
-    base_acc: float  # sum of p_i (all local)
-    n_frames: int = 0
-
-    @property
-    def mean_acc(self) -> float:
-        return (self.base_acc + self.total_gain) / max(self.n_frames, 1)
-
-
-# --------------------------------------------------------------------------- #
-# Algorithm 1 (online) — DP over confidence-sorted backlog, dominance pruning
-# --------------------------------------------------------------------------- #
-
-
-def cbo_plan(frames: Sequence[Frame], env: Env, *, now: float = 0.0) -> Plan:
-    """Paper Algorithm 1 with parent pointers instead of equality backtracking
-    (identical schedule; the pointers just make the chain reconstruction
-    O(k) and exact under float arithmetic).
-
-    Frames are sorted by descending confidence; the DP decides, frame by
-    frame, whether to append its transmission to the serial uplink schedule.
-    Returns theta = max confidence among planned offloads (0 if none) and the
-    resolution of the highest-confidence planned offload.
-    """
-    k = len(frames)
-    m = len(env.acc_server)
-    order = sorted(range(k), key=lambda i: -frames[i].conf)
-
-    # pair: (t_busy, gain, parent_pair, decision)  decision = (frame, r) | None
-    pairs: list[tuple] = [(now, 0.0, None, None)]
-    for j in order:
-        f = frames[j]
-        cand = list(pairs)  # "no offload" carries every pair over unchanged
-        for p in pairs:
-            t, gain = p[0], p[1]
-            for r in range(m):
-                t_new = max(t, f.arrival) + f.sizes[r] / env.bandwidth
-                if t_new + env.server_time + env.latency <= f.arrival + env.deadline:
-                    dA = env.acc_server[r] - f.conf
-                    if dA > 0:
-                        cand.append((t_new, gain + dA, p, (j, r)))
-        # dominance pruning: Pareto frontier over (t ascending, gain ascending)
-        cand.sort(key=lambda p: (p[0], -p[1]))
-        pairs = []
-        best = -np.inf
-        for p in cand:
-            if p[1] > best + 1e-12:
-                pairs.append(p)
-                best = p[1]
-    best_pair = max(pairs, key=lambda p: p[1])
-    chain: list[tuple[int, int]] = []
-    node = best_pair
-    while node is not None and node[3] is not None:
-        chain.append(node[3])
-        node = node[2]
-    base = sum(f.conf for f in frames)
-    if not chain:
-        return Plan(theta=0.0, resolution=m - 1, offloads=[], total_gain=0.0, base_acc=base, n_frames=k)
-    theta = max(frames[i].conf for i, _ in chain)
-    r0 = next(r for i, r in chain if frames[i].conf == theta)
-    return Plan(
-        theta=theta, resolution=r0, offloads=sorted(chain),
-        total_gain=best_pair[1], base_acc=base, n_frames=k,
-    )
-
-
-# --------------------------------------------------------------------------- #
-# Offline Optimal — arrival-order DP over the time-windowed solution graph
-# --------------------------------------------------------------------------- #
-
-
-def optimal_schedule(frames: Sequence[Frame], env: Env) -> Plan:
-    """The paper's offline optimal (§IV-C): full knowledge of all frames,
-    DP over levels (= frames in arrival order), m+1 options per level,
-    dominance-pruned (T, C) path attributes. Least cost = max accuracy.
-    (The paper's c(V^npu)=+A^npu is treated as the obvious typo for -A.)
-    """
-    m = len(env.acc_server)
-    order = sorted(range(len(frames)), key=lambda i: frames[i].arrival)
-    # state: (busy_time, total_acc, parent_state, decision)
-    states: list[tuple] = [(0.0, 0.0, None, None)]
-    for i in order:
-        f = frames[i]
-        nxt: list = []
-        for st in states:
-            t, acc = st[0], st[1]
-            nxt.append((t, acc + f.conf, st, None))  # NPU option
-            for r in range(m):
-                t_new = max(t, f.arrival) + f.sizes[r] / env.bandwidth
-                if t_new + env.server_time + env.latency <= f.arrival + env.deadline:
-                    nxt.append((t_new, acc + env.acc_server[r], st, (i, r)))
-        nxt.sort(key=lambda p: (p[0], -p[1]))
-        states = []
-        best = -np.inf
-        for p in nxt:
-            if p[1] > best + 1e-12:
-                states.append(p)
-                best = p[1]
-    best_state = max(states, key=lambda p: p[1])
-    chain = []
-    node = best_state
-    while node is not None:
-        if node[3] is not None:
-            chain.append(node[3])
-        node = node[2]
-    base = sum(f.conf for f in frames)
-    gain = best_state[1] - base
-    theta = max((frames[i].conf for i, _ in chain), default=0.0)
-    r0 = next((r for i, r in chain if frames[i].conf == theta), m - 1)
-    return Plan(
-        theta=theta, resolution=r0, offloads=sorted(chain), total_gain=gain,
-        base_acc=base, n_frames=len(frames),
-    )
+__all__ = ["Frame", "Env", "Plan", "cbo_plan", "optimal_schedule", "brute_force"]
 
 
 # --------------------------------------------------------------------------- #

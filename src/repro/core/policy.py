@@ -1,70 +1,46 @@
-"""Adaptive CBO controller (paper §IV-D deployment loop).
+"""Compatibility facade for the paper §IV-D deployment loop.
 
-Maintains the backlog of locally-classified frames, estimates bandwidth with
-an EWMA over observed transfers, and re-runs Algorithm 1 to refresh
-(theta, resolution, capacity) — the knobs the data plane consumes.
+The decision plane moved to ``repro.policy``: policies implement
+``observe / plan / consume`` (``repro/policy/base.py``), ``PolicyRunner``
+owns the EWMA bandwidth estimate, and serving engines select policies by
+name (``policy="cbo"``).  ``AdaptiveController`` — the old hardwired
+backlog+EWMA+Algorithm-1 bundle — survives here as a thin shim over
+``PolicyRunner`` + ``CBOPolicy`` with its historical constructor and
+attributes, so existing callers and tests keep working.  New code should
+use ``repro.policy`` directly.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from typing import Callable, Iterable
 
-import numpy as np
+from repro.policy.policies import CBOPolicy
+from repro.policy.runner import BandwidthEstimator, PolicyRunner
+from repro.policy.types import Frame
 
-from repro.core.cbo import Env, Frame, Plan, cbo_plan
-
-
-@dataclass
-class BandwidthEstimator:
-    alpha: float = 0.3
-    estimate_bps: float = 1e6
-
-    def observe(self, payload_bytes: float, seconds: float):
-        if seconds > 1e-9:
-            self.estimate_bps = (1 - self.alpha) * self.estimate_bps + self.alpha * (payload_bytes / seconds)
+__all__ = ["AdaptiveController", "BandwidthEstimator"]
 
 
-@dataclass
-class AdaptiveController:
-    resolutions: tuple[int, ...]
-    acc_server: tuple[float, ...]  # A^o_r, measured offline (paper Fig. 10)
-    deadline: float
-    latency: float
-    server_time: float
-    size_of: callable  # res -> payload bytes
-    bw: BandwidthEstimator = field(default_factory=BandwidthEstimator)
-    backlog: list = field(default_factory=list)
-    max_backlog: int = 64
+class AdaptiveController(PolicyRunner):
+    """Deprecated alias: a ``PolicyRunner`` hardwired to the ``cbo`` policy.
 
-    def add_frame(self, arrival: float, conf: float):
-        self.backlog.append(Frame(arrival, float(conf), tuple(self.size_of(r) for r in self.resolutions)))
-        if len(self.backlog) > self.max_backlog:
-            self.backlog = self.backlog[-self.max_backlog :]
+    Keeps the pre-policy-plane constructor signature and the ``backlog`` /
+    ``add_frame`` / ``plan(now)`` / ``consume`` surface.
+    """
 
-    def plan(self, now: float) -> Plan:
-        env = Env(
-            # floor at 1 byte/s: a dead link must plan "all local", not
-            # divide by zero inside the DP
-            bandwidth=max(self.bw.estimate_bps, 1.0),
-            latency=self.latency,
-            server_time=self.server_time,
-            deadline=self.deadline,
-            acc_server=self.acc_server,
+    def __init__(self, resolutions: tuple, acc_server: tuple, deadline: float,
+                 latency: float, server_time: float, size_of: Callable,
+                 bw: BandwidthEstimator | None = None,
+                 backlog: Iterable[Frame] | None = None, max_backlog: int = 64):
+        super().__init__(
+            CBOPolicy(max_backlog=max_backlog),
+            resolutions=resolutions,
+            acc_server=acc_server,
+            deadline=deadline,
+            latency=latency,
+            server_time=server_time,
+            size_of=size_of,
+            bw=bw,
         )
-        # drop frames whose window already expired
-        self.backlog = [f for f in self.backlog if f.arrival + self.deadline > now]
-        return cbo_plan(self.backlog, env, now=now)
-
-    def consume(self, frame_indices) -> int:
-        """Remove frames that were actually offloaded.
-
-        ``frame_indices`` are backlog indices as seen by the most recent
-        ``plan()`` call (which prunes expired frames before planning, so the
-        indices stay aligned as long as consume runs before new ``add_frame``
-        calls — appends only ever extend the tail). Returns the number of
-        frames removed; out-of-range indices are ignored.
-        """
-        drop = {int(i) for i in frame_indices}
-        kept = [f for i, f in enumerate(self.backlog) if i not in drop]
-        removed = len(self.backlog) - len(kept)
-        self.backlog = kept
-        return removed
+        self.max_backlog = max_backlog
+        if backlog:
+            self.policy.observe(list(backlog))

@@ -1,0 +1,48 @@
+"""The offload decision plane (paper §IV, made pluggable).
+
+One protocol (``OffloadPolicy``: observe / plan / consume), one registry
+(``@register`` / ``make_policy``), six built-in policies, and the two
+harnesses that drive them: ``PolicyRunner`` (live serving, owns the
+bandwidth estimate) and ``replay_trace`` (offline §V evaluation).  Serving
+engines, benchmarks, and examples all select behavior by policy name —
+see docs/policies.md for how to add one.
+"""
+from repro.policy.base import BacklogPolicy, OffloadPolicy, OneShotPolicy
+from repro.policy.frontier import cbo_plan, optimal_schedule
+from repro.policy.policies import (
+    CBOPolicy,
+    GreedyRatePolicy,
+    LocalPolicy,
+    OptimalPolicy,
+    ServerPolicy,
+    ThresholdPolicy,
+)
+from repro.policy.registry import available_policies, make_policy, register, resolve_policies
+from repro.policy.replay import ReplayResult, replay_trace
+from repro.policy.runner import BandwidthEstimator, PolicyRunner
+from repro.policy.types import Env, Frame, Plan
+
+__all__ = [
+    "OffloadPolicy",
+    "BacklogPolicy",
+    "OneShotPolicy",
+    "register",
+    "make_policy",
+    "available_policies",
+    "resolve_policies",
+    "CBOPolicy",
+    "OptimalPolicy",
+    "ThresholdPolicy",
+    "LocalPolicy",
+    "ServerPolicy",
+    "GreedyRatePolicy",
+    "PolicyRunner",
+    "BandwidthEstimator",
+    "replay_trace",
+    "ReplayResult",
+    "cbo_plan",
+    "optimal_schedule",
+    "Frame",
+    "Env",
+    "Plan",
+]

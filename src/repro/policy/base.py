@@ -1,0 +1,93 @@
+"""The ``OffloadPolicy`` protocol and backlog base classes.
+
+An offload policy is the *decision plane* of the two-tier cascade: it
+watches locally-classified frames accumulate (``observe``), is asked —
+against the network/deadline regime of the moment — which of them to send
+to the server and at which resolution (``plan``), and is told which frames
+actually left the device (``consume``).  Everything else (bandwidth
+estimation, uplink simulation, tier inference, metrics) is the data plane's
+job; serving engines, the trace-replay evaluator, and benchmarks all drive
+policies through this one interface.
+
+Implementations register under a string key (``@register("cbo")``) and are
+constructed with ``make_policy(name, **cfg)`` — see ``registry.py``.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Protocol, Sequence, runtime_checkable
+
+from repro.policy.types import Env, Frame, Plan, plan_from_chain
+
+
+@runtime_checkable
+class OffloadPolicy(Protocol):
+    """Structural interface every offload policy implements."""
+
+    backlog: list[Frame]
+
+    def observe(self, frames: Sequence[Frame]) -> None:
+        """Append locally-classified frames to the decision backlog."""
+        ...
+
+    def plan(self, now: float, env: Env) -> Plan:
+        """Decide (theta, r°, offload set) over the backlog at time ``now``
+        under ``env``.  ``Plan.offloads`` indexes the backlog as it stands
+        when ``plan`` returns (policies may prune expired frames first)."""
+        ...
+
+    def consume(self, indices: Iterable[int]) -> int:
+        """Remove frames that left the device.  ``indices`` are backlog
+        indices as seen by the most recent ``plan`` call.  Returns the
+        number of frames removed."""
+        ...
+
+
+class BacklogPolicy:
+    """Base: a bounded backlog with the index-stable observe/consume dance.
+
+    ``consume`` must run before the next ``observe`` for indices to stay
+    aligned with the last ``plan`` (appends only ever extend the tail —
+    the same invariant the old ``AdaptiveController`` documented).
+    """
+
+    #: prune frames whose deadline window has expired before planning
+    prune_expired: bool = True
+
+    def __init__(self, max_backlog: int | None = 64):
+        self.backlog: list[Frame] = []
+        self.max_backlog = max_backlog
+
+    def observe(self, frames: Sequence[Frame]) -> None:
+        self.backlog.extend(frames)
+        if self.max_backlog is not None and len(self.backlog) > self.max_backlog:
+            self.backlog = self.backlog[-self.max_backlog :]
+
+    def plan(self, now: float, env: Env) -> Plan:
+        if self.prune_expired:
+            self.backlog = [f for f in self.backlog if f.arrival + env.deadline > now]
+        return self._plan(now, env)
+
+    def _plan(self, now: float, env: Env) -> Plan:
+        raise NotImplementedError
+
+    def consume(self, indices: Iterable[int]) -> int:
+        drop = {int(i) for i in indices}
+        kept = [f for i, f in enumerate(self.backlog) if i not in drop]
+        removed = len(self.backlog) - len(kept)
+        self.backlog = kept
+        return removed
+
+
+class OneShotPolicy(BacklogPolicy):
+    """Base for policies that decide each frame exactly once at arrival
+    (Server, greedy rate rules): whatever ``plan`` does not offload is
+    answered locally forever, so ``consume`` clears the whole backlog."""
+
+    def consume(self, indices: Iterable[int]) -> int:
+        removed = len(self.backlog)
+        self.backlog = []
+        return removed
+
+
+def empty_plan(frames: Sequence[Frame], m: int) -> Plan:
+    return plan_from_chain([], frames, 0.0, m)

@@ -1,0 +1,143 @@
+"""The built-in offload policies — every §V approach as a registry entry.
+
+  * ``cbo``         — paper Algorithm 1 (vectorized frontier DP)
+  * ``optimal``     — the paper's offline optimal (full-knowledge DP)
+  * ``threshold``   — fixed confidence threshold θ at a fixed resolution
+  * ``local``       — never offload (fast tier answers everything)
+  * ``server``      — offload everything at the highest sustainable resolution
+  * ``greedy-rate`` — the FastVA/Compress rule: offload whenever the best
+                      deadline-feasible resolution beats the local tier's
+                      population accuracy; no per-frame confidence
+
+All of them speak ``observe / plan / consume`` (see ``base.py``); serving
+engines and the trace-replay evaluator cannot tell them apart.
+"""
+from __future__ import annotations
+
+from repro.policy.base import BacklogPolicy, OneShotPolicy, empty_plan
+from repro.policy.frontier import cbo_plan, optimal_schedule
+from repro.policy.registry import register
+from repro.policy.types import Env, Plan, plan_from_chain
+
+
+@register("cbo")
+class CBOPolicy(BacklogPolicy):
+    """Algorithm 1: re-plan the confidence-sorted backlog every call."""
+
+    def _plan(self, now: float, env: Env) -> Plan:
+        return cbo_plan(self.backlog, env, now=now)
+
+
+@register("optimal")
+class OptimalPolicy(BacklogPolicy):
+    """Offline optimal over whatever window of frames has been observed.
+
+    Full-knowledge baseline: plans as if the uplink were free at t=0 and
+    never prunes (the DP itself handles deadline feasibility); the caller
+    replays the schedule against the real uplink.  Unbounded backlog by
+    default — the caller picks the window.
+    """
+
+    prune_expired = False
+
+    def __init__(self, max_backlog: int | None = None):
+        super().__init__(max_backlog=max_backlog)
+
+    def _plan(self, now: float, env: Env) -> Plan:
+        return optimal_schedule(self.backlog, env)
+
+
+@register("threshold")
+class ThresholdPolicy(BacklogPolicy):
+    """Fixed θ: offload every backlog frame with conf < θ, serially, at a
+    fixed resolution index (-1 = highest), skipping infeasible frames."""
+
+    def __init__(self, theta: float = 0.5, resolution: int = -1,
+                 max_backlog: int | None = 64):
+        super().__init__(max_backlog=max_backlog)
+        self.theta = float(theta)
+        self.resolution = int(resolution)
+
+    def _plan(self, now: float, env: Env) -> Plan:
+        m = len(env.acc_server)
+        r = self.resolution % m
+        chain: list[tuple[int, int]] = []
+        gain = 0.0
+        t = now
+        for i, f in enumerate(self.backlog):
+            if f.conf >= self.theta:
+                continue
+            t_new = max(t, f.arrival) + f.sizes[r] / env.bandwidth
+            if t_new + env.server_time + env.latency <= f.arrival + env.deadline:
+                chain.append((i, r))
+                gain += env.acc_server[r] - f.conf
+                t = t_new
+        return plan_from_chain(chain, self.backlog, gain, m)
+
+
+@register("local")
+class LocalPolicy(OneShotPolicy):
+    """Never offload: the fast tier's answer always stands."""
+
+    def _plan(self, now: float, env: Env) -> Plan:
+        return empty_plan(self.backlog, len(env.acc_server))
+
+
+@register("server")
+class ServerPolicy(OneShotPolicy):
+    """Offload every frame at the highest resolution whose transmission fits
+    both the frame interval (keep up with the stream) and the per-frame
+    deadline budget; frames are sent even if queueing will make them late
+    (there is no local fallback to save them for)."""
+
+    transmit_late = True
+
+    def __init__(self, frame_interval: float = 1.0 / 30.0,
+                 max_backlog: int | None = 64):
+        super().__init__(max_backlog=max_backlog)
+        self.frame_interval = float(frame_interval)
+
+    def _plan(self, now: float, env: Env) -> Plan:
+        m = len(env.acc_server)
+        if not self.backlog:
+            return empty_plan(self.backlog, m)
+        tx_budget = min(self.frame_interval,
+                        env.deadline - env.server_time - env.latency)
+        sizes = self.backlog[0].sizes
+        res_ok = [r for r in range(m) if sizes[r] / max(env.bandwidth, 1e-9) <= tx_budget]
+        if not res_ok:
+            return empty_plan(self.backlog, m)
+        r = max(res_ok)
+        chain = [(i, r) for i in range(len(self.backlog))]
+        gain = sum(env.acc_server[r] - f.conf for f in self.backlog)
+        return plan_from_chain(chain, self.backlog, gain, m)
+
+
+@register("greedy-rate")
+class GreedyRatePolicy(OneShotPolicy):
+    """FastVA/Compress-style greedy rate rule: per frame, walk resolutions
+    from the highest down; stop as soon as the server's (population)
+    accuracy at that resolution no longer beats the local tier's; offload
+    at the first resolution that also meets the deadline.  No per-frame
+    confidence — ``local_acc`` is the local tier's population accuracy."""
+
+    def __init__(self, local_acc: float = 0.5, max_backlog: int | None = 64):
+        super().__init__(max_backlog=max_backlog)
+        self.local_acc = float(local_acc)
+
+    def _plan(self, now: float, env: Env) -> Plan:
+        m = len(env.acc_server)
+        chain: list[tuple[int, int]] = []
+        gain = 0.0
+        t = now
+        for i, f in enumerate(self.backlog):
+            for r in range(m - 1, -1, -1):
+                if env.acc_server[r] <= self.local_acc:
+                    break  # lower resolutions are worse than answering locally
+                t_new = max(t, f.arrival) + f.sizes[r] / env.bandwidth
+                if t_new + env.server_time + env.latency <= f.arrival + env.deadline:
+                    chain.append((i, r))
+                    gain += env.acc_server[r] - f.conf
+                    t = t_new
+                    break
+        return plan_from_chain(chain, self.backlog, gain, m)

@@ -2,8 +2,10 @@
 
 Single-stream control loop (``CascadeServer``, paper §IV-D) per batch:
   1. fast tier classifies the batch (int8 "NPU" model) — instant answers;
-  2. calibrated confidences go to the AdaptiveController (Algorithm 1),
-     which returns (theta, resolution, capacity) from current bandwidth;
+  2. calibrated confidences go to the offload policy (``policy=`` registry
+     name or instance — default ``"cbo"``, Algorithm 1) via a
+     ``PolicyRunner`` that owns the bandwidth estimate; the plan returns
+     (theta, resolution, capacity);
   3. the data plane escalates the K lowest-confidence frames;
   4. replies that would land after the frame's deadline are *dropped* and
      the fast-tier answer stands — the paper's fallback, which doubles as
@@ -16,7 +18,8 @@ Single-stream control loop (``CascadeServer``, paper §IV-D) per batch:
 sharing ONE uplink: a vectorized event queue (``serving/events.py``)
 replaces the per-frame Python loop, a fair scheduler
 (``serving/scheduler.py``) decides the uplink order across streams, each
-stream keeps its own AdaptiveController/bandwidth estimate, and the
+stream keeps its own policy runner/bandwidth estimate (heterogeneous
+fleets via a per-stream ``policy`` factory), and the
 low-confidence frames of every stream are aggregated into one slow-tier
 batch per round (``core.cascade.slow_pass_multires``). With n_streams=1 it
 reproduces ``CascadeServer`` within tie-breaking noise (bench_multistream
@@ -33,7 +36,7 @@ import jax.numpy as jnp
 
 from repro.core.cascade import cascade_classify, fast_pass, slow_pass_multires
 from repro.core.netsim import Uplink, png_size_model
-from repro.core.policy import AdaptiveController, BandwidthEstimator
+from repro.policy import BandwidthEstimator, PolicyRunner, resolve_policies
 from repro.serving.events import ArrivalSchedule, EscalationBatch, select_escalations
 from repro.serving.metrics import AggregateMetrics, ServeMetrics
 from repro.serving.scheduler import FairScheduler
@@ -52,8 +55,10 @@ class ServeConfig:
     size_of: Callable = png_size_model  # resolution -> upload bytes
 
 
-def _make_controller(cfg: ServeConfig, uplink: Uplink, share: float = 1.0) -> AdaptiveController:
-    return AdaptiveController(
+def _make_runner(policy, cfg: ServeConfig, uplink: Uplink, share: float = 1.0) -> PolicyRunner:
+    """Wrap one decision policy (name or instance) for one stream."""
+    return PolicyRunner(
+        policy,
         resolutions=cfg.resolutions,
         acc_server=cfg.acc_server,
         deadline=cfg.deadline,
@@ -65,14 +70,17 @@ def _make_controller(cfg: ServeConfig, uplink: Uplink, share: float = 1.0) -> Ad
 
 
 class CascadeServer:
+    """Single-stream engine; ``policy`` is a registry name (``"cbo"``,
+    ``"threshold"``, …) or an ``OffloadPolicy`` instance."""
+
     def __init__(self, cfg: ServeConfig, fast_forward: Callable, slow_forward: Callable,
-                 calibrate: Callable, uplink: Uplink):
+                 calibrate: Callable, uplink: Uplink, policy="cbo"):
         self.cfg = cfg
         self.fast_forward = fast_forward
         self.slow_forward = slow_forward
         self.calibrate = calibrate
         self.uplink = uplink
-        self.controller = _make_controller(cfg, uplink)
+        self.controller = _make_runner(resolve_policies(policy, 1)[0], cfg, uplink)
         self.metrics = ServeMetrics()
 
     def process_stream(self, frames: np.ndarray, labels: Optional[np.ndarray] = None) -> ServeMetrics:
@@ -141,7 +149,8 @@ class MultiStreamServer:
 
     def __init__(self, cfg: ServeConfig, fast_forward: Callable, slow_forward: Callable,
                  calibrate: Callable, uplink: Uplink, n_streams: int,
-                 scheduler: Optional[FairScheduler] = None, stagger: bool = True):
+                 scheduler: Optional[FairScheduler] = None, stagger: bool = True,
+                 policy="cbo"):
         if n_streams < 1:
             raise ValueError("n_streams must be >= 1")
         self.cfg = cfg
@@ -159,7 +168,11 @@ class MultiStreamServer:
         # Optimism self-corrects: early over-offloading shows up as queueing
         # in the observed transfer times and the EWMAs back off to the
         # contended share.
-        self.controllers = [_make_controller(cfg, uplink) for _ in range(n_streams)]
+        # ``policy``: registry name (every stream gets a fresh instance) or a
+        # per-stream factory ``stream_idx -> policy | name`` for
+        # heterogeneous fleets.
+        self.controllers = [_make_runner(p, cfg, uplink)
+                            for p in resolve_policies(policy, n_streams)]
         self.metrics = AggregateMetrics.for_streams(n_streams, uplink=uplink)
 
     def process_streams(self, frames: np.ndarray,

@@ -1,0 +1,57 @@
+"""Deterministic synthetic Trace + NetCfg grid shared by the replay
+equivalence fixture generator and the regression test.
+
+The trace is model-free (pure numpy): random-but-seeded predictions whose
+per-resolution accuracies mimic the real stack. It exists so the unified
+policy replay engine can be checked, bit-for-bit, against the accuracy
+numbers the seven hand-rolled §V loops produced before the migration.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+FIXTURE_NETS = (
+    dict(bandwidth_mbps=0.5),
+    dict(bandwidth_mbps=2.0),
+    dict(bandwidth_mbps=5.0),
+    dict(bandwidth_mbps=20.0),
+    dict(bandwidth_mbps=5.0, frame_rate=10.0),
+    dict(bandwidth_mbps=5.0, latency=0.15),
+    dict(bandwidth_mbps=2.0, frame_rate=20.0, deadline=0.3),
+)
+
+
+def make_synthetic_trace(seed: int = 0, n: int = 240):
+    """A benchmarks.approaches.Trace with planted tier qualities (no models)."""
+    from benchmarks import common as C
+    from benchmarks.approaches import Trace
+
+    rng = np.random.default_rng(seed)
+    n_classes = 10
+    labels = rng.integers(0, n_classes, size=n)
+
+    def _pred_with_acc(acc: float, salt: int) -> np.ndarray:
+        r = np.random.default_rng(seed + 1000 + salt)
+        pred = labels.copy()
+        wrong = r.uniform(size=n) >= acc
+        pred[wrong] = (labels[wrong] + 1 + r.integers(0, n_classes - 1, size=int(wrong.sum()))) % n_classes
+        return pred
+
+    fast_pred = _pred_with_acc(0.60, 0)
+    fast_fp_pred = _pred_with_acc(0.66, 1)
+    slow_accs = np.linspace(0.55, 0.92, len(C.RESOLUTIONS))
+    slow_by_res = {r: _pred_with_acc(float(a), 2 + k)
+                   for k, (r, a) in enumerate(zip(C.RESOLUTIONS, slow_accs))}
+
+    conf_raw = rng.uniform(0.25, 0.999, size=n)
+    # calibrated = raw nudged toward correctness (monotone-ish, deterministic)
+    correct = (fast_pred == labels).astype(float)
+    conf_cal = np.clip(0.15 + 0.7 * conf_raw + 0.12 * (correct - 0.5), 0.01, 0.995)
+
+    from repro.core.netsim import png_size_model
+
+    sizes = {r: png_size_model(r, base_res=32, base_bytes=60000.0) for r in C.RESOLUTIONS}
+    plan_acc = tuple(float(a) - 0.05 for a in slow_accs)
+    return Trace(labels=labels, fast_pred=fast_pred, fast_fp_pred=fast_fp_pred,
+                 slow_pred_by_res=slow_by_res, conf_raw=conf_raw, conf_cal=conf_cal,
+                 sizes=sizes, plan_acc_by_res=plan_acc, local_acc_mean=0.60)

@@ -1,0 +1,73 @@
+"""Regenerate the golden fixtures in this directory.
+
+  PYTHONPATH=src:.:tests python tests/data/regenerate_fixtures.py
+
+History: both files were originally generated from the PRE-migration code
+(the seven hand-rolled replay loops in ``benchmarks/approaches.py`` and the
+``AdaptiveController``-wired engines — see the parent commit of the policy
+plane PR), so the regression tests in ``tests/test_policy.py`` prove the
+unified replay engine and the ``policy=`` serving path reproduce the old
+behavior.  Re-running this script regenerates them from the CURRENT code:
+do that only when an intentional behavior change (e.g. a new resolution
+ladder shape in ``benchmarks/common.py``) invalidates the old baseline —
+it rebases the regression guarantee onto today's implementation.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.join(HERE, "..", "..")
+for p in (os.path.join(ROOT, "src"), ROOT, os.path.join(ROOT, "tests")):
+    sys.path.insert(0, p)
+
+
+def replay_fixture():
+    from _replay_fixture import FIXTURE_NETS, make_synthetic_trace
+    from benchmarks.approaches import APPROACHES, NetCfg
+
+    trace = make_synthetic_trace()
+    rows = []
+    for net_kw in FIXTURE_NETS:
+        net = NetCfg(**net_kw)
+        row = {"net": net_kw}
+        for name, fn in APPROACHES.items():
+            row[name] = fn(trace, net)
+        rows.append(row)
+    with open(os.path.join(HERE, "replay_fixture.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"replay_fixture.json: {len(rows)} net configs x {len(rows[0]) - 1} approaches")
+
+
+def multistream_snapshot():
+    from repro.core.netsim import Uplink, mbps
+    from repro.serving import CascadeServer, MultiStreamServer, ServeConfig
+    from repro.serving.synthetic import synthetic_streams, synthetic_tiers
+
+    fast, slow, cal = synthetic_tiers()
+    cfg = ServeConfig(resolutions=(4, 8), acc_server=(0.7, 0.99), batch_size=16,
+                      frame_rate=30.0, deadline=0.2)
+    imgs, labels = synthetic_streams(4, 64)
+    up = Uplink(bandwidth_bps=mbps(50.0), latency=0.05, server_time=cfg.server_time)
+    agg = MultiStreamServer(cfg, fast, slow, cal, up, n_streams=4).process_streams(imgs, labels)
+    snap = {"per_stream": [{"accuracy": m.accuracy, "offload_frac": m.offload_frac,
+                            "deadline_miss_frac": m.deadline_miss_frac, "n_frames": m.n_frames}
+                           for m in agg.per_stream],
+            "accuracy": agg.accuracy, "n_offloaded": int(agg.n_offloaded)}
+    imgs1, labels1 = synthetic_streams(1, 64)
+    ref = CascadeServer(cfg, fast, slow, cal,
+                        Uplink(bandwidth_bps=mbps(50.0), latency=0.05,
+                               server_time=cfg.server_time)).process_stream(imgs1[0], labels1[0])
+    snap["cascade_single"] = {"accuracy": ref.accuracy, "offload_frac": ref.offload_frac,
+                              "deadline_miss_frac": ref.deadline_miss_frac,
+                              "n_frames": ref.n_frames}
+    with open(os.path.join(HERE, "multistream_snapshot.json"), "w") as f:
+        json.dump(snap, f, indent=1)
+    print("multistream_snapshot.json: 4-stream aggregate + single-stream reference")
+
+
+if __name__ == "__main__":
+    replay_fixture()
+    multistream_snapshot()

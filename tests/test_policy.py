@@ -1,0 +1,307 @@
+"""The unified OffloadPolicy decision plane: frontier DP equivalence,
+registry, unified replay (vs pre-migration fixtures), serving regression."""
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.cbo import brute_force
+from repro.core.netsim import Uplink, mbps
+from repro.policy import (
+    BandwidthEstimator,
+    CBOPolicy,
+    Env,
+    Frame,
+    LocalPolicy,
+    PolicyRunner,
+    available_policies,
+    cbo_plan,
+    make_policy,
+    optimal_schedule,
+    replay_trace,
+    resolve_policies,
+)
+from repro.policy.reference import cbo_plan_reference, optimal_schedule_reference
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+
+
+def _random_instance(rng, n=None, m=None, deadline=None):
+    n = n or int(rng.integers(1, 10))
+    m = m or int(rng.integers(1, 5))
+    frames = [
+        Frame(arrival=i / 30, conf=float(rng.uniform(0.2, 0.99)),
+              sizes=tuple(sorted(rng.uniform(1e3, 2e5, size=m))))
+        for i in range(n)
+    ]
+    env = Env(bandwidth=float(rng.uniform(1e5, 5e6)), latency=0.05, server_time=0.037,
+              deadline=deadline or float(rng.choice([0.15, 0.2, 0.3, 0.5])),
+              acc_server=tuple(sorted(rng.uniform(0.5, 0.99, size=m))))
+    return frames, env
+
+
+# ------------------- vectorized frontier vs reference ---------------------- #
+
+
+def test_frontier_cbo_matches_reference_fuzz(rng):
+    """The vectorized DP must return the reference's *exact* schedule."""
+    for trial in range(150):
+        frames, env = _random_instance(rng)
+        now = float(rng.choice([0.0, rng.uniform(0, 0.3)]))
+        a = cbo_plan(frames, env, now=now)
+        b = cbo_plan_reference(frames, env, now=now)
+        assert a.offloads == b.offloads, trial
+        assert a.total_gain == b.total_gain, trial
+        assert (a.theta, a.resolution) == (b.theta, b.resolution), trial
+
+
+def test_frontier_optimal_matches_reference_fuzz(rng):
+    for trial in range(150):
+        frames, env = _random_instance(rng)
+        a = optimal_schedule(frames, env)
+        b = optimal_schedule_reference(frames, env)
+        assert a.offloads == b.offloads, trial
+        assert a.total_gain == b.total_gain, trial
+
+
+def test_frontier_matches_reference_under_ties(rng):
+    """Duplicate sizes/confidences force equal busy-times and gains — the
+    pruning tie-breaks must still reproduce the reference schedule."""
+    for trial in range(80):
+        n = int(rng.integers(2, 9))
+        m = int(rng.integers(1, 3))
+        sz = tuple(float(rng.choice([1e4, 5e4])) for _ in range(m))
+        frames = [Frame(arrival=(i // 2) / 30, conf=float(rng.choice([0.4, 0.6])), sizes=sz)
+                  for i in range(n)]
+        env = Env(bandwidth=1e6, latency=0.05, server_time=0.037, deadline=0.3,
+                  acc_server=tuple(float(rng.choice([0.8, 0.9])) for _ in range(m)))
+        a, b = cbo_plan(frames, env), cbo_plan_reference(frames, env)
+        assert a.offloads == b.offloads and a.total_gain == b.total_gain, trial
+        c, d = optimal_schedule(frames, env), optimal_schedule_reference(frames, env)
+        assert c.offloads == d.offloads and c.total_gain == d.total_gain, trial
+
+
+def test_frontier_optimal_matches_brute_force(rng):
+    for trial in range(60):
+        frames, env = _random_instance(rng, n=int(rng.integers(1, 6)), m=int(rng.integers(1, 3)))
+        opt = optimal_schedule(frames, env)
+        assert opt.base_acc + opt.total_gain == pytest.approx(brute_force(frames, env), abs=1e-9), trial
+
+
+def test_theta_tiebreak_selects_by_frame_index():
+    """Two offloaded frames with exactly equal confidence: r° must come from
+    the earliest such frame, not whichever float-equality match came first."""
+    env = Env(bandwidth=1e9, latency=0.0, server_time=0.0, deadline=1.0,
+              acc_server=(0.7, 0.9))
+    frames = [Frame(0.0, 0.5, (1e3, 1e6)), Frame(1 / 30, 0.5, (1e3, 2e3))]
+    plan = cbo_plan(frames, env)
+    assert plan.theta == 0.5
+    offs = dict(plan.offloads)
+    assert set(offs) == {0, 1}
+    # deterministic: the plan's r° is frame 0's resolution
+    assert plan.resolution == offs[0]
+
+
+# ------------------------------ registry ----------------------------------- #
+
+
+def test_registry_has_all_builtins():
+    assert {"cbo", "optimal", "threshold", "local", "server", "greedy-rate"} <= set(
+        available_policies()
+    )
+
+
+def test_make_policy_unknown_name_raises():
+    with pytest.raises(KeyError, match="unknown policy"):
+        make_policy("no-such-policy")
+
+
+def test_make_policy_passthrough_and_cfg():
+    p = CBOPolicy(max_backlog=7)
+    assert make_policy(p) is p
+    with pytest.raises(TypeError):
+        make_policy(p, max_backlog=3)
+    q = make_policy("threshold", theta=0.7)
+    assert q.theta == 0.7
+
+
+def test_resolve_policies_specs():
+    ps = resolve_policies("cbo", 3)
+    assert len(ps) == 3 and len({id(p) for p in ps}) == 3  # fresh instances
+    mixed = resolve_policies(lambda s: "local" if s % 2 else "cbo", 4)
+    assert isinstance(mixed[0], CBOPolicy) and isinstance(mixed[1], LocalPolicy)
+    with pytest.raises(ValueError, match="single policy instance"):
+        resolve_policies(CBOPolicy(), 2)
+
+
+# ------------------------- protocol semantics ------------------------------ #
+
+
+def _env(m=2, bw=mbps(50.0)):
+    return Env(bandwidth=bw, latency=0.01, server_time=0.01, deadline=5.0,
+               acc_server=(0.7, 0.99)[:m])
+
+
+def test_local_policy_never_offloads():
+    p = make_policy("local")
+    p.observe([Frame(0.0, 0.1, (1e3, 1e4))])
+    plan = p.plan(0.0, _env())
+    assert plan.offloads == []
+    p.consume(i for i, _ in plan.offloads)
+    assert p.backlog == []  # one-shot: decided frames never linger
+
+
+def test_threshold_policy_obeys_theta():
+    p = make_policy("threshold", theta=0.5, resolution=1)
+    p.observe([Frame(0.0, 0.4, (1e3, 1e4)), Frame(0.01, 0.6, (1e3, 1e4))])
+    plan = p.plan(0.02, _env())
+    assert plan.offloads == [(0, 1)]
+
+
+def test_server_policy_caps_resolution_by_sustainable_rate():
+    # 8e3 bytes at 1e5 B/s = 80 ms > 1/30 s interval; 1e3 bytes fits
+    p = make_policy("server", frame_interval=1 / 30)
+    p.observe([Frame(0.0, 0.9, (1e3, 8e3))])
+    plan = p.plan(0.0, _env(bw=1e5))
+    assert plan.offloads == [(0, 0)]
+
+
+def test_greedy_rate_policy_respects_local_acc():
+    p = make_policy("greedy-rate", local_acc=0.995)  # nothing beats local
+    p.observe([Frame(0.0, 0.2, (1e3, 1e4))])
+    assert p.plan(0.0, _env()).offloads == []
+    q = make_policy("greedy-rate", local_acc=0.5)
+    q.observe([Frame(0.0, 0.2, (1e3, 1e4))])
+    assert q.plan(0.0, _env()).offloads == [(0, 1)]  # highest beating res
+
+
+def test_cbo_policy_prunes_expired_frames():
+    p = make_policy("cbo")
+    env = Env(bandwidth=mbps(50.0), latency=0.01, server_time=0.01, deadline=0.2,
+              acc_server=(0.7, 0.99))
+    p.observe([Frame(0.0, 0.3, (1e3, 1e4)), Frame(1.0, 0.3, (1e3, 1e4))])
+    p.plan(1.0, env)  # frame 0's window [0, 0.2] expired at now=1.0
+    assert [f.arrival for f in p.backlog] == [1.0]
+
+
+def test_policy_runner_floors_dead_bandwidth():
+    runner = PolicyRunner("cbo", resolutions=(4, 8), acc_server=(0.7, 0.99),
+                          deadline=0.2, latency=0.01, server_time=0.01,
+                          size_of=lambda r: 1e3 * r,
+                          bw=BandwidthEstimator(estimate_bps=0.0))
+    runner.add_frame(0.0, 0.3)
+    plan = runner.plan(now=0.0)  # must not divide by zero
+    assert plan.offloads == []
+
+
+# ------------------- unified replay vs pre-migration ----------------------- #
+
+
+@pytest.fixture(scope="module")
+def bench_path():
+    root = os.path.join(os.path.dirname(__file__), "..")
+    for p in (root, os.path.dirname(__file__)):
+        if p not in sys.path:
+            sys.path.insert(0, p)
+    return root
+
+
+def test_replay_reproduces_premigration_approaches(bench_path):
+    """All seven §V approaches through make_policy + replay_trace must match
+    the hand-rolled per-approach loops they replaced, to 1e-9."""
+    from _replay_fixture import FIXTURE_NETS, make_synthetic_trace
+    from benchmarks.approaches import APPROACHES, NetCfg
+
+    with open(os.path.join(DATA, "replay_fixture.json")) as f:
+        fixture = json.load(f)
+    trace = make_synthetic_trace()
+    assert len(fixture) == len(FIXTURE_NETS)
+    for row, net_kw in zip(fixture, FIXTURE_NETS):
+        assert row["net"] == net_kw
+        net = NetCfg(**net_kw)
+        for name, fn in APPROACHES.items():
+            assert fn(trace, net) == pytest.approx(row[name], abs=1e-9), (net_kw, name)
+
+
+def test_replay_trace_local_tier_sheds_under_load():
+    """local_time > frame interval: the local tier can't keep up, frames are
+    shed (scored wrong) — the Compress baseline's failure mode."""
+    n = 30
+    labels = np.zeros(n, dtype=np.int64)
+    env = Env(bandwidth=1.0, latency=10.0, server_time=0.0, deadline=0.1,
+              acc_server=(0.9,))  # uplink useless: everything stays local
+    res = replay_trace("local", conf=np.full(n, 0.9), slow_pred=np.zeros((1, n)),
+                       sizes=[1e3], env=env, frame_interval=1 / 30,
+                       local_pred=labels, local_time=0.5)
+    acc_shed = res.accuracy(labels)
+    res2 = replay_trace("local", conf=np.full(n, 0.9), slow_pred=np.zeros((1, n)),
+                        sizes=[1e3], env=env, frame_interval=1 / 30,
+                        local_pred=labels, local_time=0.0)
+    assert res2.accuracy(labels) == 1.0
+    assert acc_shed < 0.2  # at 0.5 s/frame vs 30 fps, most frames shed
+
+
+# ---------------------- serving engine regression -------------------------- #
+
+
+@pytest.fixture(scope="module")
+def multistream_snapshot():
+    with open(os.path.join(DATA, "multistream_snapshot.json")) as f:
+        return json.load(f)
+
+
+def test_multistream_policy_cbo_reproduces_premigration_metrics(multistream_snapshot):
+    """MultiStreamServer(policy="cbo") must reproduce the per-stream metrics
+    recorded before the AdaptiveController -> policy-plane migration."""
+    from repro.serving import MultiStreamServer, ServeConfig
+    from repro.serving.synthetic import synthetic_streams, synthetic_tiers
+
+    fast, slow, cal = synthetic_tiers()
+    cfg = ServeConfig(resolutions=(4, 8), acc_server=(0.7, 0.99), batch_size=16,
+                      frame_rate=30.0, deadline=0.2)
+    imgs, labels = synthetic_streams(4, 64)
+    up = Uplink(bandwidth_bps=mbps(50.0), latency=0.05, server_time=cfg.server_time)
+    agg = MultiStreamServer(cfg, fast, slow, cal, up, n_streams=4,
+                            policy="cbo").process_streams(imgs, labels)
+    for m, ref in zip(agg.per_stream, multistream_snapshot["per_stream"]):
+        assert m.accuracy == pytest.approx(ref["accuracy"], abs=1e-9)
+        assert m.offload_frac == pytest.approx(ref["offload_frac"], abs=1e-9)
+        assert m.deadline_miss_frac == pytest.approx(ref["deadline_miss_frac"], abs=1e-9)
+        assert m.n_frames == ref["n_frames"]
+    assert agg.n_offloaded == multistream_snapshot["n_offloaded"]
+
+
+def test_cascade_server_policy_cbo_reproduces_premigration_metrics(multistream_snapshot):
+    from repro.serving import CascadeServer, ServeConfig
+    from repro.serving.synthetic import synthetic_streams, synthetic_tiers
+
+    fast, slow, cal = synthetic_tiers()
+    cfg = ServeConfig(resolutions=(4, 8), acc_server=(0.7, 0.99), batch_size=16,
+                      frame_rate=30.0, deadline=0.2)
+    imgs, labels = synthetic_streams(1, 64)
+    up = Uplink(bandwidth_bps=mbps(50.0), latency=0.05, server_time=cfg.server_time)
+    m = CascadeServer(cfg, fast, slow, cal, up).process_stream(imgs[0], labels[0])
+    ref = multistream_snapshot["cascade_single"]
+    assert m.accuracy == pytest.approx(ref["accuracy"], abs=1e-9)
+    assert m.offload_frac == pytest.approx(ref["offload_frac"], abs=1e-9)
+
+
+def test_multistream_heterogeneous_policy_fleet():
+    """Per-stream factory: 'local' streams must never offload while 'cbo'
+    streams still escalate over the shared uplink."""
+    from repro.serving import MultiStreamServer, ServeConfig
+    from repro.serving.synthetic import synthetic_streams, synthetic_tiers
+
+    fast, slow, cal = synthetic_tiers()
+    cfg = ServeConfig(resolutions=(4, 8), acc_server=(0.7, 0.99), batch_size=16,
+                      frame_rate=30.0, deadline=0.2)
+    imgs, labels = synthetic_streams(4, 64)
+    up = Uplink(bandwidth_bps=mbps(50.0), latency=0.05, server_time=cfg.server_time)
+    agg = MultiStreamServer(cfg, fast, slow, cal, up, n_streams=4,
+                            policy=lambda s: "local" if s < 2 else "cbo",
+                            ).process_streams(imgs, labels)
+    per = agg.per_stream
+    assert per[0].n_offloaded == 0 and per[1].n_offloaded == 0
+    assert per[2].n_offloaded + per[3].n_offloaded > 0
