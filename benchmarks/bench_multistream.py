@@ -1,18 +1,22 @@
 """Multi-stream CBO serving: aggregate accuracy / offload / deadline-miss vs
 number of concurrent streams sharing one uplink.
 
-Sweeps N ∈ {1, 4, 16, 64} client streams through ``MultiStreamServer`` on a
-fixed uplink, so per-stream bandwidth shrinks as 1/N and the contention /
-fairness regime opens up. The N=1 row is cross-checked against the
-single-stream ``CascadeServer`` on the identical workload (they must agree
-within tie-breaking noise — that equivalence is the refactor's regression
-anchor).
+Sweeps N ∈ {1, 4, 16, 64, 256, 1024} client streams through
+``MultiStreamServer`` on a fixed uplink, so per-stream bandwidth shrinks
+as 1/N and the contention / fairness regime opens up. The N=1 row is
+cross-checked against the single-stream ``CascadeServer`` on the identical
+workload (they must agree within tie-breaking noise — that equivalence is
+the refactor's regression anchor).  ``--churn`` adds a dynamic-fleet
+scenario at each N: half the streams join mid-run with ragged lifetimes
+(``ArrivalSchedule.churn``) — the regime the batched ``FleetRunner``
+control plane exists for.
 
 Default stack is a tiny synthetic two-tier pair (runs in seconds, no
 training); ``--stack models`` uses the trained int4/fp stack from
 ``benchmarks.common`` like the other paper benchmarks.
 
   PYTHONPATH=src:benchmarks python benchmarks/bench_multistream.py
+  PYTHONPATH=src:benchmarks python benchmarks/bench_multistream.py --streams 64,256,1024 --churn
   PYTHONPATH=src:benchmarks python benchmarks/bench_multistream.py --bw 0.5 --scheduler fifo
 """
 from __future__ import annotations
@@ -27,7 +31,7 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-STREAM_COUNTS = (1, 4, 16, 64)
+STREAM_COUNTS = (1, 4, 16, 64, 256, 1024)
 
 
 # synthetic stack: planted-signal images, weak fast tier, oracle-ish slow tier
@@ -71,6 +75,21 @@ def model_setup(args):
     return cfg, fast, slow, stack.platt, streams
 
 
+def churn_schedule(S, n_frames, cfg, seed=0):
+    """Half the fleet serves the whole run; the rest join mid-run with
+    ragged lifetimes (joins staggered over the first half of the run)."""
+    from repro.serving import ArrivalSchedule
+
+    rng = np.random.default_rng(seed)
+    even = np.arange(S) % 2 == 0
+    join = np.where(even, 0, rng.integers(0, max(n_frames // 2, 1), size=S))
+    ragged = np.minimum(n_frames - join,
+                        rng.integers(max(n_frames // 4, 1), n_frames + 1, size=S))
+    length = np.where(even, n_frames, ragged)
+    return ArrivalSchedule.churn(S, n_frames, cfg.frame_rate, cfg.deadline,
+                                 join=join, length=length)
+
+
 def run(args=None) -> dict:
     from repro.core.netsim import Uplink, mbps
     from repro.serving import CascadeServer, FairScheduler, MultiStreamServer
@@ -108,6 +127,17 @@ def run(args=None) -> dict:
             print(f"bench_multistream,singlestream_ref_accuracy={single_row['accuracy']},"
                   f"delta={round(delta, 4)}", flush=True)
 
+        if args.churn and S > 1:  # dynamic fleet: staggered join/leave
+            sched = churn_schedule(S, frames.shape[1], cfg, seed=args.seed)
+            srv = MultiStreamServer(cfg, fast, slow, calibrate, fresh_uplink(), n_streams=S,
+                                    scheduler=FairScheduler(args.scheduler))
+            mc = srv.process_streams(frames, labels, schedule=sched)
+            crow = {"n_streams": S, "scenario": "churn",
+                    "served_frac": round(mc.n_frames / labels.size, 4), **mc.summary()}
+            rows.append(crow)
+            print("bench_multistream," + ",".join(f"{k}={v}" for k, v in crow.items()),
+                  flush=True)
+
     out = {"config": {"bw_mbps": args.bw, "latency": args.latency, "fps": args.fps,
                       "deadline": args.deadline, "frames": args.frames,
                       "scheduler": args.scheduler, "stack": args.stack},
@@ -132,6 +162,9 @@ def parse_args(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--scheduler", choices=("round_robin", "fifo"), default="round_robin")
     ap.add_argument("--stack", choices=("synthetic", "models"), default="synthetic")
+    ap.add_argument("--churn", action="store_true",
+                    help="also run a dynamic-fleet scenario per N (staggered "
+                         "join/leave, ragged stream lifetimes)")
     return ap.parse_args(argv)
 
 

@@ -6,8 +6,12 @@ stream's fast-tier inference into one call per round, aggregates the
 low-confidence frames of all streams into one slow-tier batch, and
 schedules transfers with weighted fair queueing.
 
+``--churn`` turns the lockstep replay into a dynamic fleet: half the
+clients join mid-run with ragged lifetimes, exercising the batched
+``FleetRunner`` control plane's admit/retire path.
+
   PYTHONPATH=src:benchmarks python examples/multi_client_serve.py --streams 8 --bw 5
-  PYTHONPATH=src python examples/multi_client_serve.py --streams 8 --synthetic
+  PYTHONPATH=src python examples/multi_client_serve.py --streams 8 --synthetic --churn
 """
 import argparse
 import os
@@ -29,6 +33,9 @@ def main():
                          "across streams for a heterogeneous fleet")
     ap.add_argument("--synthetic", action="store_true",
                     help="tiny synthetic tiers (no training) instead of the trained stack")
+    ap.add_argument("--churn", action="store_true",
+                    help="dynamic fleet: half the clients join mid-run with "
+                         "ragged lifetimes (staggered join/leave)")
     args = ap.parse_args()
 
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -69,7 +76,12 @@ def main():
     policy = names[0] if len(names) == 1 else (lambda s: names[s % len(names)])
     server = MultiStreamServer(cfg, fast, slow, calibrate, uplink, n_streams=args.streams,
                                scheduler=FairScheduler(args.scheduler), policy=policy)
-    metrics = server.process_streams(frames, labels)
+    schedule = None
+    if args.churn:
+        from benchmarks.bench_multistream import churn_schedule
+
+        schedule = churn_schedule(args.streams, frames.shape[1], cfg)
+    metrics = server.process_streams(frames, labels, schedule=schedule)
 
     print(f"\n=== {args.policy} multi-client serving: {args.streams} streams @ "
           f"{args.bw} Mbps shared, {args.fps} fps, L={args.latency*1e3:.0f} ms, "

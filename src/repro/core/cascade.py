@@ -63,6 +63,8 @@ def cascade_classify(
     threshold,
     capacity: int,
     resolution: int,
+    use_fused: bool = False,
+    platt_ab=None,
 ):
     """Run the two-tier cascade on one batch of images.
 
@@ -71,7 +73,8 @@ def cascade_classify(
     """
     B = images.shape[0]
     K = min(capacity, B)
-    fast_preds, conf = fast_pass(fast_forward, calibrate, images)
+    fast_preds, conf = fast_pass(fast_forward, calibrate, images,
+                                 use_fused=use_fused, platt_ab=platt_ab)
 
     gate = conf < threshold
     score = jnp.where(gate, -conf, -jnp.inf)  # lowest confidence first
@@ -87,14 +90,38 @@ def cascade_classify(
     return CascadeOut(merged, fast_preds, conf, escalated, esc_idx)
 
 
-def fast_pass(fast_forward, calibrate, images):
+def fast_pass(fast_forward, calibrate, images, *, use_fused: bool = False, platt_ab=None):
     """Fast-tier half of the cascade: predictions + calibrated confidence.
 
     The multi-stream engine runs this once over the *concatenated* frames of
     every stream (one batched NPU call), then lets each stream's controller
     gate its own slice — the slow-tier half is ``slow_pass_multires``.
+
+    ``use_fused=True`` opts into the fused Pallas softmax-max → Platt →
+    gate kernel (``kernels/fused_calib_gate``): the full softmax vector is
+    never materialized to HBM.  It needs the Platt coefficients
+    ``platt_ab=(a, b)`` (the generic ``calibrate`` callable is bypassed);
+    off-TPU the same kernel runs in interpret mode, so results are
+    backend-independent.  ``tests/test_cascade.py`` pins parity against
+    the unfused path.
     """
     logits = fast_forward(images)
+    if use_fused:
+        if platt_ab is None:
+            raise ValueError("use_fused=True requires platt_ab=(a, b) Platt coefficients")
+        from repro.kernels.fused_calib_gate.kernel import calib_gate
+
+        a, b = platt_ab
+        B, V = logits.shape
+        # block sizes must tile the operand exactly; fall back to one block
+        # on ragged batch/vocab extents (trailing partial rounds)
+        bb = 128 if B % 128 == 0 else B
+        bv = 2048 if V % 2048 == 0 else V
+        # theta=0: the gate output is unused here — thresholds come from the
+        # planner after confidences are known, via select_escalations/top_k
+        conf, _ = calib_gate(logits, float(a), float(b), 0.0, bb=bb, bv=bv,
+                             interpret=jax.default_backend() != "tpu")
+        return jnp.argmax(logits, axis=-1), conf.astype(F32)
     conf = calibrate(max_softmax(logits)).astype(F32)
     return jnp.argmax(logits, axis=-1), conf
 

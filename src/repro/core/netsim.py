@@ -110,6 +110,38 @@ class Uplink:
         self.queued_seconds = 0.0
 
 
-def png_size_model(res: int, *, base_res: int = 224, base_bytes: float = 60_000.0) -> float:
-    """Approximate lossless-PNG payload size vs resolution (scales ~ r²)."""
-    return base_bytes * (res / base_res) ** 2
+def png_size_model(res, *, base_res: int = 224, base_bytes: float = 60_000.0):
+    """Approximate lossless-PNG payload size vs resolution (scales ~ r²).
+
+    Accepts a scalar resolution (returns a float, as before) or an array
+    of resolutions (returns a float64 array) — the vectorized ``size_of``
+    contract the serving engines rely on (``ServeConfig.size_of``).
+    """
+    res = np.asarray(res, dtype=np.float64)
+    out = base_bytes * (res / base_res) ** 2
+    return float(out) if out.ndim == 0 else out
+
+
+def payload_sizes(size_of, res) -> np.ndarray:
+    """Vectorized ``size_of`` with a per-element fallback.
+
+    The ``ServeConfig.size_of`` contract is "accepts resolution arrays"
+    (``png_size_model`` does); user-supplied scalar-only callables are
+    mapped element-wise so existing configs keep working.
+    """
+    res = np.asarray(res)
+    try:
+        out = np.asarray(size_of(res), dtype=np.float64)
+        if out.shape == res.shape:
+            return out
+    except (TypeError, ValueError):
+        pass
+    return np.asarray([float(size_of(int(r))) for r in res.ravel()],
+                      dtype=np.float64).reshape(res.shape)
+
+
+def transfer_seconds(lands, t_submit, *, latency: float, server_time: float) -> np.ndarray:
+    """Observed wire time per transfer: reply-land minus submit minus the
+    fixed RTT components — what bandwidth estimators feed on, batched."""
+    return np.asarray(lands, dtype=np.float64) - np.asarray(t_submit, dtype=np.float64) \
+        - latency - server_time

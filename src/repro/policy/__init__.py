@@ -8,7 +8,8 @@ engines, benchmarks, and examples all select behavior by policy name —
 see docs/policies.md for how to add one.
 """
 from repro.policy.base import BacklogPolicy, OffloadPolicy, OneShotPolicy
-from repro.policy.frontier import cbo_plan, optimal_schedule
+from repro.policy.fleet import FleetRunner, FleetState
+from repro.policy.frontier import cbo_plan, cbo_plan_many, optimal_schedule
 from repro.policy.policies import (
     CBOPolicy,
     GreedyRatePolicy,
@@ -20,9 +21,14 @@ from repro.policy.policies import (
 from repro.policy.registry import available_policies, make_policy, register, resolve_policies
 from repro.policy.replay import ReplayResult, replay_trace
 from repro.policy.runner import BandwidthEstimator, PolicyRunner
-from repro.policy.types import Env, Frame, Plan
+from repro.policy.types import Env, EnvBatch, Frame, Plan, PlanBatch
 
 __all__ = [
+    "FleetRunner",
+    "FleetState",
+    "EnvBatch",
+    "PlanBatch",
+    "cbo_plan_many",
     "OffloadPolicy",
     "BacklogPolicy",
     "OneShotPolicy",

@@ -41,6 +41,14 @@ class OffloadPolicy(Protocol):
         number of frames removed."""
         ...
 
+    # Policies MAY additionally implement the batched fleet path
+    #   plan_many(now: (S,), state: FleetState, env: EnvBatch) -> PlanBatch
+    # planning S independent backlogs in one call (``policy/fleet.py``).
+    # ``BacklogPolicy`` provides a looped default, so every policy is
+    # fleet-servable; the built-ins override it with genuinely vectorized
+    # implementations.  ``FleetRunner`` falls back to the loop for
+    # policies without it.
+
 
 class BacklogPolicy:
     """Base: a bounded backlog with the index-stable observe/consume dance.
@@ -69,6 +77,17 @@ class BacklogPolicy:
 
     def _plan(self, now: float, env: Env) -> Plan:
         raise NotImplementedError
+
+    def plan_many(self, now, state, env):
+        """Batched fleet path: plan S independent backlogs at once.
+
+        Default falls back to looping ``_plan`` per stream (``state`` must
+        already be pruned — ``FleetRunner`` does this); vectorized policies
+        override.  See ``policy/fleet.py``.
+        """
+        from repro.policy.fleet import looped_plan_many
+
+        return looped_plan_many(self, now, state, env)
 
     def consume(self, indices: Iterable[int]) -> int:
         drop = {int(i) for i in indices}

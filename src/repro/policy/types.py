@@ -5,10 +5,16 @@ speaks: a policy observes ``Frame``s, is asked to ``plan`` against an
 ``Env`` (the network/deadline regime at that instant), and answers with a
 ``Plan``.  They used to live in ``core/cbo.py``; they are re-exported from
 there for backward compatibility.
+
+``EnvBatch`` / ``PlanBatch`` are their struct-of-arrays fleet
+counterparts: one env snapshot and one plan for S streams at once, the
+vocabulary of the batched ``plan_many`` path (see ``policy/fleet.py``).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
+
+import numpy as np
 
 
 @dataclass(frozen=True)
@@ -42,6 +48,146 @@ class Plan:
     @property
     def mean_acc(self) -> float:
         return (self.base_acc + self.total_gain) / max(self.n_frames, 1)
+
+
+@dataclass(frozen=True)
+class EnvBatch:
+    """One ``Env`` snapshot for S streams: per-stream bandwidth estimates,
+    shared link/deadline scalars, and the (m,) payload-size vector that
+    every stream's frames share (``Frame.sizes`` is per-config, not
+    per-frame)."""
+
+    bandwidth: np.ndarray  # (S,) uplink bytes/s, floored at 1.0
+    latency: float
+    server_time: float
+    deadline: float
+    acc_server: tuple[float, ...]
+    sizes: np.ndarray  # (m,) payload bytes per resolution
+
+    @property
+    def n_streams(self) -> int:
+        return len(self.bandwidth)
+
+    @property
+    def sizes_tuple(self) -> tuple[float, ...]:
+        return tuple(float(x) for x in self.sizes)
+
+    def for_stream(self, s: int) -> Env:
+        return Env(bandwidth=float(self.bandwidth[s]), latency=self.latency,
+                   server_time=self.server_time, deadline=self.deadline,
+                   acc_server=self.acc_server)
+
+    def subset(self, streams: np.ndarray) -> "EnvBatch":
+        return EnvBatch(bandwidth=self.bandwidth[streams], latency=self.latency,
+                        server_time=self.server_time, deadline=self.deadline,
+                        acc_server=self.acc_server, sizes=self.sizes)
+
+
+@dataclass
+class PlanBatch:
+    """S ``Plan``s as struct-of-arrays: per-stream scalars plus one flat
+    (stream, backlog position, resolution) offload list sorted by
+    (stream, pos).  ``plan(s)`` materializes the per-stream ``Plan`` —
+    identical to what the looped path returns (gains/base accuracies may
+    differ from the looped floats only by summation order)."""
+
+    theta: np.ndarray  # (S,)
+    resolution: np.ndarray  # (S,) int — r° per stream (m-1 when no offloads)
+    n_offloads: np.ndarray  # (S,) int
+    total_gain: np.ndarray  # (S,)
+    base_acc: np.ndarray  # (S,)
+    n_frames: np.ndarray  # (S,) int — backlog length at plan time
+    off_stream: np.ndarray  # (E,) int
+    off_pos: np.ndarray  # (E,) int — position within the stream's backlog
+    off_res: np.ndarray  # (E,) int — resolution index
+    planned: np.ndarray = None  # (S,) bool — streams this batch planned for
+
+    def __len__(self) -> int:
+        return len(self.theta)
+
+    @classmethod
+    def empty(cls, n_streams: int, m: int) -> "PlanBatch":
+        z = np.zeros(n_streams)
+        zi = np.zeros(n_streams, dtype=np.int64)
+        return cls(theta=z.copy(), resolution=np.full(n_streams, m - 1, dtype=np.int64),
+                   n_offloads=zi.copy(), total_gain=z.copy(), base_acc=z.copy(),
+                   n_frames=zi.copy(), off_stream=np.zeros(0, dtype=np.int64),
+                   off_pos=np.zeros(0, dtype=np.int64), off_res=np.zeros(0, dtype=np.int64),
+                   planned=np.zeros(n_streams, dtype=bool))
+
+    @classmethod
+    def from_plans(cls, plans: list[Plan], m: int) -> "PlanBatch":
+        """Pack per-stream ``Plan``s (the looped fallback) into one batch."""
+        out = cls.empty(len(plans), m)
+        offs = []
+        for s, p in enumerate(plans):
+            out.theta[s] = p.theta
+            out.resolution[s] = p.resolution
+            out.n_offloads[s] = len(p.offloads)
+            out.total_gain[s] = p.total_gain
+            out.base_acc[s] = p.base_acc
+            out.n_frames[s] = p.n_frames
+            out.planned[s] = True
+            offs.extend((s, i, r) for i, r in p.offloads)
+        if offs:
+            a = np.asarray(offs, dtype=np.int64)
+            out.off_stream, out.off_pos, out.off_res = a[:, 0], a[:, 1], a[:, 2]
+        return out
+
+    @classmethod
+    def from_offloads(cls, n_streams: int, m: int, *, off_stream, off_pos, off_res,
+                      off_conf, total_gain, base_acc, n_frames) -> "PlanBatch":
+        """Assemble from a flat offload list — the batched counterpart of
+        ``plan_from_chain``: theta is the max confidence among each stream's
+        offloads, r° that frame's resolution, ties broken toward the
+        earliest backlog position."""
+        out = cls.empty(n_streams, m)
+        out.total_gain = np.asarray(total_gain, dtype=np.float64)
+        out.base_acc = np.asarray(base_acc, dtype=np.float64)
+        out.n_frames = np.asarray(n_frames, dtype=np.int64)
+        out.planned = np.ones(n_streams, dtype=bool)
+        off_stream = np.asarray(off_stream, dtype=np.int64)
+        off_pos = np.asarray(off_pos, dtype=np.int64)
+        off_res = np.asarray(off_res, dtype=np.int64)
+        if len(off_stream) == 0:
+            return out
+        order = np.lexsort((off_pos, off_stream))
+        out.off_stream = off_stream[order]
+        out.off_pos = off_pos[order]
+        out.off_res = off_res[order]
+        out.n_offloads = np.bincount(out.off_stream, minlength=n_streams)
+        conf = np.asarray(off_conf, dtype=np.float64)[order]
+        # theta/r° selection: per stream, highest conf, earliest pos on ties
+        pick = np.lexsort((out.off_pos, -conf, out.off_stream))
+        first = np.r_[True, out.off_stream[pick][1:] != out.off_stream[pick][:-1]]
+        sel = pick[first]
+        out.theta[out.off_stream[sel]] = conf[sel]
+        out.resolution[out.off_stream[sel]] = out.off_res[sel]
+        return out
+
+    def scatter(self, streams: np.ndarray, sub: "PlanBatch") -> None:
+        """Merge a group-local batch (stream ids local to ``streams``) in."""
+        for name in ("theta", "resolution", "n_offloads", "total_gain",
+                     "base_acc", "n_frames", "planned"):
+            getattr(self, name)[streams] = getattr(sub, name)
+        if len(sub.off_stream):
+            self.off_stream = np.concatenate([self.off_stream, streams[sub.off_stream]])
+            self.off_pos = np.concatenate([self.off_pos, sub.off_pos])
+            self.off_res = np.concatenate([self.off_res, sub.off_res])
+
+    def sort_offloads(self) -> None:
+        order = np.lexsort((self.off_pos, self.off_stream))
+        self.off_stream = self.off_stream[order]
+        self.off_pos = self.off_pos[order]
+        self.off_res = self.off_res[order]
+
+    def plan(self, s: int) -> Plan:
+        """Materialize stream ``s``'s per-stream ``Plan`` view."""
+        sel = self.off_stream == s
+        return Plan(theta=float(self.theta[s]), resolution=int(self.resolution[s]),
+                    offloads=sorted(zip(self.off_pos[sel].tolist(), self.off_res[sel].tolist())),
+                    total_gain=float(self.total_gain[s]), base_acc=float(self.base_acc[s]),
+                    n_frames=int(self.n_frames[s]))
 
 
 def plan_from_chain(chain: list[tuple[int, int]], frames, gain: float, m: int) -> Plan:

@@ -2,12 +2,16 @@
 
 Modules:
   * ``engine``    — ``CascadeServer`` (single stream) and
-                    ``MultiStreamServer`` (N streams, shared uplink);
-  * ``events``    — vectorized arrival/escalation event queues;
+                    ``MultiStreamServer`` (N streams, shared uplink,
+                    batched ``FleetRunner`` control plane);
+  * ``events``    — vectorized arrival/escalation event queues, incl.
+                    dynamic-fleet churn schedules (``ArrivalSchedule.churn``);
   * ``scheduler`` — fair uplink scheduling across streams;
-  * ``metrics``   — per-stream and aggregate serving metrics.
+  * ``metrics``   — per-stream and aggregate serving metrics (SoA counters
+                    folded once per round).
 
-See docs/serving.md for the event-queue model and scheduler knobs.
+See docs/serving.md for the event-queue model, the fleet control plane,
+and scheduler knobs.
 """
 from repro.serving.engine import CascadeServer, MultiStreamServer, ServeConfig
 from repro.serving.events import ArrivalSchedule, EscalationBatch, select_escalations

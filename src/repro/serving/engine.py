@@ -15,14 +15,24 @@ Single-stream control loop (``CascadeServer``, paper §IV-D) per batch:
      the device) so they are never re-planned.
 
 ``MultiStreamServer`` generalizes this to N concurrent client streams
-sharing ONE uplink: a vectorized event queue (``serving/events.py``)
-replaces the per-frame Python loop, a fair scheduler
-(``serving/scheduler.py``) decides the uplink order across streams, each
-stream keeps its own policy runner/bandwidth estimate (heterogeneous
-fleets via a per-stream ``policy`` factory), and the
-low-confidence frames of every stream are aggregated into one slow-tier
-batch per round (``core.cascade.slow_pass_multires``). With n_streams=1 it
-reproduces ``CascadeServer`` within tie-breaking noise (bench_multistream
+sharing ONE uplink, with *both* planes batched:
+
+  * data plane — one fast-tier call over every stream's frames per round,
+    one gathered slow-tier batch, one vectorized uplink transmit;
+  * control plane — a ``FleetRunner`` (``policy/fleet.py``) holds all
+    per-stream policy state as struct-of-arrays (flat ragged backlogs,
+    (S,) EWMA bandwidth vector) and plans every stream in one batched
+    ``plan_many`` call per round.
+
+The round loop therefore contains no per-stream or per-frame Python:
+planning, bandwidth observation, backlog consume/extend and metrics all
+run as (S,)-vector / segment operations.  Fleets are dynamic: an
+``ArrivalSchedule.churn`` schedule admits and retires clients mid-run
+(staggered joins, ragged stream lengths), and trailing partial batches are
+processed rather than silently dropped.  With a lockstep schedule the
+engine reproduces the looped implementation's metrics exactly
+(``tests/data/multistream_snapshot.json``), and with n_streams=1 it
+matches ``CascadeServer`` within tie-breaking noise (bench_multistream
 checks this).
 """
 from __future__ import annotations
@@ -35,8 +45,8 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core.cascade import cascade_classify, fast_pass, slow_pass_multires
-from repro.core.netsim import Uplink, png_size_model
-from repro.policy import BandwidthEstimator, PolicyRunner, resolve_policies
+from repro.core.netsim import Uplink, payload_sizes, png_size_model, transfer_seconds
+from repro.policy import BandwidthEstimator, FleetRunner, PolicyRunner, resolve_policies
 from repro.serving.events import ArrivalSchedule, EscalationBatch, select_escalations
 from repro.serving.metrics import AggregateMetrics, ServeMetrics
 from repro.serving.scheduler import FairScheduler
@@ -52,7 +62,14 @@ class ServeConfig:
     fast_time: float = 0.020  # Table III: fast tier per frame
     calib_time: float = 0.008  # Table III: calibration
     server_time: float = 0.037  # Table III: slow tier per frame
-    size_of: Callable = png_size_model  # resolution -> upload bytes
+    size_of: Callable = png_size_model  # resolution (scalar or array) -> upload bytes
+    use_fused: bool = False  # fused Pallas calibrate+gate kernel in the fast pass
+    platt_ab: Optional[tuple] = None  # (a, b) Platt coefficients for use_fused
+
+
+def _fast_pass(cfg: ServeConfig, fast_forward, calibrate, images):
+    return fast_pass(fast_forward, calibrate, images,
+                     use_fused=cfg.use_fused, platt_ab=cfg.platt_ab)
 
 
 def _make_runner(policy, cfg: ServeConfig, uplink: Uplink, share: float = 1.0) -> PolicyRunner:
@@ -84,15 +101,21 @@ class CascadeServer:
         self.metrics = ServeMetrics()
 
     def process_stream(self, frames: np.ndarray, labels: Optional[np.ndarray] = None) -> ServeMetrics:
-        """Replay a frame stream at cfg.frame_rate through the cascade."""
+        """Replay a frame stream at cfg.frame_rate through the cascade.
+
+        Every frame is served: the trailing partial batch (when
+        ``len(frames)`` is not a multiple of the batch size) runs as a
+        smaller final round instead of being silently dropped.
+        """
         cfg = self.cfg
         gamma = 1.0 / cfg.frame_rate
         B = cfg.batch_size
         t_fast = cfg.fast_time + cfg.calib_time
-        n = len(frames) - len(frames) % B
+        n = len(frames)
         for start in range(0, n, B):
-            batch = jnp.asarray(frames[start : start + B])
-            arrivals = (start + np.arange(B)) * gamma
+            b = min(B, n - start)
+            batch = jnp.asarray(frames[start : start + b])
+            arrivals = (start + np.arange(b)) * gamma
             t_done_fast = arrivals + t_fast
 
             # plan from current backlog + bandwidth estimate
@@ -104,6 +127,7 @@ class CascadeServer:
             out = cascade_classify(
                 self.fast_forward, self.slow_forward, self.calibrate, batch,
                 threshold=theta, capacity=capacity, resolution=res,
+                use_fused=cfg.use_fused, platt_ab=cfg.platt_ab,
             )
             conf = np.asarray(out.conf)
             escalated = np.asarray(out.escalated)
@@ -131,10 +155,10 @@ class CascadeServer:
             for i in np.flatnonzero(~escalated):
                 self.controller.add_frame(float(arrivals[i]), float(conf[i]))
 
-            lat = np.full(B, t_fast)
+            lat = np.full(b, t_fast)
             lat[esc] = np.where(ok, lands - arrivals[esc], cfg.deadline)
-            n_correct = int((final == labels[start : start + B]).sum()) if labels is not None else 0
-            self.metrics.update_batch(B, int(ok.sum()), int((~ok).sum()), n_correct, lat)
+            n_correct = int((final == labels[start : start + b]).sum()) if labels is not None else 0
+            self.metrics.update_batch(b, int(ok.sum()), int((~ok).sum()), n_correct, lat)
         return self.metrics
 
 
@@ -142,9 +166,10 @@ class MultiStreamServer:
     """N concurrent client streams sharing one uplink and one slow tier.
 
     Per round: one batched fast-tier call over all streams' frames, one
-    Algorithm-1 plan per stream, one vectorized escalation gate, one fair
-    uplink schedule, one batched slow-tier call over the cross-stream
-    escalations, and vectorized deadline/metric accounting.
+    batched ``plan_many`` over every stream's backlog (``FleetRunner``),
+    one vectorized escalation gate, one fair uplink schedule, one batched
+    slow-tier call over the cross-stream escalations, and vectorized
+    deadline/metric accounting — no per-stream or per-frame Python.
     """
 
     def __init__(self, cfg: ServeConfig, fast_forward: Callable, slow_forward: Callable,
@@ -171,13 +196,23 @@ class MultiStreamServer:
         # ``policy``: registry name (every stream gets a fresh instance) or a
         # per-stream factory ``stream_idx -> policy | name`` for
         # heterogeneous fleets.
-        self.controllers = [_make_runner(p, cfg, uplink)
-                            for p in resolve_policies(policy, n_streams)]
+        self.fleet = FleetRunner(
+            resolve_policies(policy, n_streams),
+            resolutions=cfg.resolutions, acc_server=cfg.acc_server,
+            deadline=cfg.deadline, latency=uplink.latency,
+            server_time=cfg.server_time, size_of=cfg.size_of,
+            bw_init=uplink.bandwidth_bps,
+        )
         self.metrics = AggregateMetrics.for_streams(n_streams, uplink=uplink)
 
     def process_streams(self, frames: np.ndarray,
-                        labels: Optional[np.ndarray] = None) -> AggregateMetrics:
-        """Replay S frame streams; ``frames`` is (S, N, H, W, C), ``labels`` (S, N)."""
+                        labels: Optional[np.ndarray] = None,
+                        schedule: Optional[ArrivalSchedule] = None) -> AggregateMetrics:
+        """Replay S frame streams; ``frames`` is (S, N, H, W, C), ``labels``
+        (S, N).  ``schedule`` defaults to the lockstep interleaved replay;
+        pass an ``ArrivalSchedule.churn`` to stagger stream join/leave —
+        ``frames[s, n]`` is then the frame stream s produces at global slot
+        n, and only its valid slots are served."""
         cfg = self.cfg
         S = self.n_streams
         if frames.shape[0] != S:
@@ -185,47 +220,47 @@ class MultiStreamServer:
         B = cfg.batch_size
         t_fast = cfg.fast_time + cfg.calib_time
         resolutions = np.asarray(cfg.resolutions)
-        schedule = ArrivalSchedule.interleaved(S, frames.shape[1], cfg.frame_rate,
-                                              cfg.deadline, stagger=self.stagger)
-        # horizon over *simulated* frames only — rounds() trims the trailing
-        # partial batch, and utilization must not be diluted by unsimulated time
-        n_sim = frames.shape[1] - frames.shape[1] % B
-        self.metrics.wall_time = (
-            float(schedule.arrival[:, :n_sim].max()) + cfg.deadline if n_sim else 0.0
-        )
+        if schedule is None:
+            schedule = ArrivalSchedule.interleaved(S, frames.shape[1], cfg.frame_rate,
+                                                  cfg.deadline, stagger=self.stagger)
+        if schedule.n_streams != S or schedule.n_frames != frames.shape[1]:
+            raise ValueError("schedule shape must match frames (S, N)")
+        self.metrics.wall_time = schedule.horizon
 
-        for start, arr in schedule.rounds(B):
-            flat = jnp.asarray(frames[:, start : start + B].reshape(S * B, *frames.shape[2:]))
-            fp, cf = fast_pass(self.fast_forward, self.calibrate, flat)
-            fast_preds = np.asarray(fp).reshape(S, B)
-            conf = np.asarray(cf).reshape(S, B)
-            t_ready = arr + t_fast  # (S, B)
+        for start, arr, valid in schedule.rounds(B):
+            b = arr.shape[1]
+            active = valid.any(axis=1)  # (S,) streams with frames this round
+            # retire state of streams outside their lifetime (left, or not
+            # yet joined — the latter have nothing to clear)
+            self.fleet.retire(~active)
 
-            # control plane: one Algorithm-1 plan per stream
-            theta = np.zeros(S)
-            cap = np.ones(S, dtype=np.int64)
-            res_idx = np.zeros(S, dtype=np.int64)
-            plans = []
-            for s, ctrl in enumerate(self.controllers):
-                plan = ctrl.plan(now=float(arr[s, 0]))
-                plans.append(plan)
-                cap[s] = max(len(plan.offloads), 1)
-                theta[s] = plan.theta if plan.offloads else 0.0
-                res_idx[s] = plan.resolution
+            flat = jnp.asarray(frames[:, start : start + b].reshape(S * b, *frames.shape[2:]))
+            fp, cf = _fast_pass(cfg, self.fast_forward, self.calibrate, flat)
+            fast_preds = np.asarray(fp).reshape(S, b)
+            conf = np.asarray(cf).reshape(S, b)
+            t_ready = arr + t_fast  # (S, b); +inf on invalid slots
+
+            # control plane: one batched plan over every active backlog
+            now = np.min(arr, axis=1)  # first valid arrival (inf if none)
+            batch = self.fleet.plan_all(now, active)
+            theta = batch.theta
+            cap = np.where(active, np.maximum(batch.n_offloads, 1), 0)
+            res_idx = batch.resolution
 
             # vectorized gate + gathered cross-stream escalation batch
-            s_idx, slot_idx = select_escalations(conf, theta, cap)
+            conf_gate = np.where(valid, conf, np.inf)
+            s_idx, slot_idx = select_escalations(conf_gate, theta, cap)
             res_px = resolutions[res_idx[s_idx]]
             esc = EscalationBatch(
                 stream=s_idx, slot=slot_idx,
                 t_ready=t_ready[s_idx, slot_idx],
-                payload=np.asarray([cfg.size_of(int(r)) for r in res_px], dtype=np.float64),
+                payload=payload_sizes(cfg.size_of, res_px),
                 res=res_px,
             )
 
             # one batched slow-tier call for every stream's escalations
             if len(esc):
-                gathered = jnp.take(flat, jnp.asarray(s_idx * B + slot_idx), axis=0)
+                gathered = jnp.take(flat, jnp.asarray(s_idx * b + slot_idx), axis=0)
                 slow_preds = np.asarray(slow_pass_multires(self.slow_forward, gathered, esc.res))
             else:
                 slow_preds = np.zeros(0, dtype=fast_preds.dtype)
@@ -241,30 +276,30 @@ class MultiStreamServer:
             final = fast_preds.copy()
             final[q.stream[ok], q.slot[ok]] = slow_q[ok]
 
-            # per-stream bandwidth observations, in transmission order
-            for k in range(len(q)):
-                self.controllers[q.stream[k]].bw.observe(
-                    q.payload[k],
-                    lands[k] - q.t_ready[k] - self.uplink.latency - self.uplink.server_time,
-                )
+            # batched per-stream bandwidth observations (transmission order)
+            self.fleet.observe_bandwidth(
+                q.stream, q.payload,
+                transfer_seconds(lands, q.t_ready, latency=self.uplink.latency,
+                                 server_time=self.uplink.server_time))
 
-            # backlog bookkeeping per stream (same semantics as CascadeServer)
-            esc_mask = np.zeros((S, B), dtype=bool)
+            # backlog bookkeeping, batched (same semantics as CascadeServer):
+            # planned offloads left the device; non-escalated valid frames
+            # join their stream's backlog in slot order
+            self.fleet.consume(batch)
+            esc_mask = np.zeros((S, b), dtype=bool)
             esc_mask[s_idx, slot_idx] = True
-            for s, ctrl in enumerate(self.controllers):
-                ctrl.consume(i for i, _ in plans[s].offloads)
-                for i in np.flatnonzero(~esc_mask[s]):
-                    ctrl.add_frame(float(arr[s, i]), float(conf[s, i]))
+            add = valid & ~esc_mask
+            add_s, _ = np.nonzero(add)
+            self.fleet.observe_frames(add_s, arr[add], conf[add].astype(np.float64))
 
             # vectorized metrics: latency per frame, counts per stream
-            lat = np.full((S, B), t_fast)
+            lat = np.full((S, b), t_fast)
             lat[q.stream[ok], q.slot[ok]] = lands[ok] - arr[q.stream[ok], q.slot[ok]]
             lat[q.stream[~ok], q.slot[~ok]] = cfg.deadline
             off_counts = np.bincount(q.stream[ok], minlength=S)
             miss_counts = np.bincount(q.stream[~ok], minlength=S)
-            correct = ((final == labels[:, start : start + B]).sum(axis=1)
+            correct = (((final == labels[:, start : start + b]) & valid).sum(axis=1)
                        if labels is not None else np.zeros(S, dtype=np.int64))
-            for s in range(S):
-                self.metrics[s].update_batch(B, off_counts[s], miss_counts[s],
-                                             int(correct[s]), lat[s])
+            self.metrics.update_round(valid.sum(axis=1), off_counts, miss_counts,
+                                      correct, lat, valid)
         return self.metrics

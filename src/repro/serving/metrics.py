@@ -71,15 +71,53 @@ def jain_index(x) -> float:
     return float(x.sum() ** 2 / (x.size * (x**2).sum()))
 
 
-@dataclass
 class AggregateMetrics:
-    per_stream: list  # list[ServeMetrics], index = stream id
-    uplink: object = None  # the shared Uplink (for contention counters)
-    wall_time: float = 0.0  # simulated horizon (last arrival + deadline)
+    """Struct-of-arrays fleet metrics: (S,) counter vectors folded once per
+    round (``update_round``) so the serving engine's inner loop carries no
+    per-stream Python.  ``per_stream`` materializes the familiar
+    ``ServeMetrics`` views lazily (tests, reports); latencies are kept as
+    per-round (S, B) chunks plus validity masks until then."""
+
+    def __init__(self, n_streams: int, uplink=None):
+        self.n_streams = int(n_streams)
+        self.uplink = uplink  # the shared Uplink (for contention counters)
+        self.wall_time: float = 0.0  # simulated horizon (last arrival + deadline)
+        self._frames = np.zeros(n_streams, dtype=np.int64)
+        self._offloaded = np.zeros(n_streams, dtype=np.int64)
+        self._missed = np.zeros(n_streams, dtype=np.int64)
+        self._correct = np.zeros(n_streams, dtype=np.int64)
+        self._lat_chunks: list = []  # [(lat (S, b), valid (S, b))]
+        self._cache: list | None = None
 
     @classmethod
     def for_streams(cls, n_streams: int, uplink=None) -> "AggregateMetrics":
-        return cls(per_stream=[ServeMetrics() for _ in range(n_streams)], uplink=uplink)
+        return cls(n_streams, uplink=uplink)
+
+    def update_round(self, n_frames, n_offloaded, n_missed, n_correct,
+                     latencies, valid) -> None:
+        """Fold one round's (S,)-vector counters and (S, b) latencies in."""
+        self._frames += np.asarray(n_frames, dtype=np.int64)
+        self._offloaded += np.asarray(n_offloaded, dtype=np.int64)
+        self._missed += np.asarray(n_missed, dtype=np.int64)
+        self._correct += np.asarray(n_correct, dtype=np.int64)
+        self._lat_chunks.append((np.asarray(latencies, dtype=np.float64),
+                                 np.asarray(valid, dtype=bool)))
+        self._cache = None
+
+    @property
+    def per_stream(self) -> list:
+        """Per-stream ``ServeMetrics`` views (index = stream id)."""
+        if self._cache is None:
+            out = []
+            for s in range(self.n_streams):
+                m = ServeMetrics(
+                    n_frames=int(self._frames[s]), n_offloaded=int(self._offloaded[s]),
+                    n_deadline_miss=int(self._missed[s]), n_correct=int(self._correct[s]))
+                m.latencies = [float(x) for lat, ok in self._lat_chunks
+                               for x in lat[s][ok[s]]]
+                out.append(m)
+            self._cache = out
+        return self._cache
 
     def __getitem__(self, s: int) -> ServeMetrics:
         return self.per_stream[s]
@@ -87,19 +125,19 @@ class AggregateMetrics:
     # -- aggregate (frame-weighted) views -------------------------------- #
     @property
     def n_frames(self) -> int:
-        return sum(m.n_frames for m in self.per_stream)
+        return int(self._frames.sum())
 
     @property
     def n_offloaded(self) -> int:
-        return sum(m.n_offloaded for m in self.per_stream)
+        return int(self._offloaded.sum())
 
     @property
     def n_deadline_miss(self) -> int:
-        return sum(m.n_deadline_miss for m in self.per_stream)
+        return int(self._missed.sum())
 
     @property
     def accuracy(self) -> float:
-        return sum(m.n_correct for m in self.per_stream) / max(self.n_frames, 1)
+        return int(self._correct.sum()) / max(self.n_frames, 1)
 
     @property
     def offload_frac(self) -> float:
@@ -112,14 +150,17 @@ class AggregateMetrics:
     @property
     def offload_fairness(self) -> float:
         """Jain index over per-stream successful-offload counts."""
-        return jain_index([m.n_offloaded for m in self.per_stream])
+        return jain_index(self._offloaded)
 
     def summary(self) -> dict:
-        lats = np.asarray([x for m in self.per_stream for x in m.latencies]) \
-            if any(m.latencies for m in self.per_stream) else np.zeros(1)
-        acc = [m.accuracy for m in self.per_stream]
+        lats = (np.concatenate([lat[ok] for lat, ok in self._lat_chunks])
+                if self._lat_chunks else np.zeros(0))
+        if lats.size == 0:
+            lats = np.zeros(1)
+        # straight from the SoA counters — no per-stream materialization
+        acc = self._correct / np.maximum(self._frames, 1)
         out = {
-            "streams": len(self.per_stream),
+            "streams": self.n_streams,
             "frames": self.n_frames,
             "accuracy": round(self.accuracy, 4),
             "offload_frac": round(self.offload_frac, 4),

@@ -75,6 +75,10 @@ class FairScheduler:
         ``cost`` is each frame's nominal wire time (payload / bandwidth);
         it drives the fair-queueing tags. Without it, tags degenerate to
         readiness order (== fifo).
+
+        ``stream`` ids are global (stable under churn: a stream keeps its
+        id across join/leave), so per-stream ``weights`` stay aligned for
+        dynamic fleets — absent streams simply contribute no frames.
         """
         stream = np.asarray(stream)
         t_ready = np.asarray(t_ready, dtype=np.float64)
@@ -82,6 +86,10 @@ class FairScheduler:
             return np.lexsort((stream, t_ready))
         cost = np.zeros(len(stream)) if cost is None else np.asarray(cost, dtype=np.float64)
         if self.weights is not None:
+            if int(stream.max()) >= len(self.weights):
+                raise ValueError(
+                    f"scheduler weights cover {len(self.weights)} streams but "
+                    f"stream id {int(stream.max())} appeared in this round")
             cost = cost / self.weights[stream]
         tags = sfq_tags(stream, t_ready, cost)
         return np.lexsort((stream, t_ready, tags))

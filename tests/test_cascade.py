@@ -77,6 +77,43 @@ def test_escalated_subset_of_gate_and_lowest_conf():
         np.testing.assert_allclose(np.sort(conf[esc]), worst, rtol=1e-6)
 
 
+def test_fused_fast_pass_matches_unfused():
+    """fast_pass(use_fused=True) — the Pallas softmax-max→Platt→gate kernel
+    (interpret mode off-TPU) — must match the unfused
+    softmax→calibrate path."""
+    from repro.core.calibration import PlattCalibrator
+    from repro.core.cascade import fast_pass
+
+    a, b = -5.0, 2.0
+    rng = np.random.default_rng(0)
+    logits = jnp.asarray(rng.normal(size=(48, 12)).astype(np.float32) * 3.0)
+    fwd = lambda x: x  # "images" are the logits for this test
+    p_ref, c_ref = fast_pass(fwd, PlattCalibrator(a, b), logits)
+    p_fused, c_fused = fast_pass(fwd, None, logits, use_fused=True, platt_ab=(a, b))
+    assert np.array_equal(np.asarray(p_ref), np.asarray(p_fused))
+    np.testing.assert_allclose(np.asarray(c_fused), np.asarray(c_ref), atol=1e-6)
+    with pytest.raises(ValueError, match="platt_ab"):
+        fast_pass(fwd, None, logits, use_fused=True)
+
+
+def test_fused_cascade_classify_matches_unfused():
+    """The full cascade with the fused fast pass agrees with the unfused
+    cascade when calibration is the same Platt transform."""
+    from repro.core.calibration import PlattCalibrator
+
+    a, b = -4.0, 1.5
+    platt = PlattCalibrator(a, b)
+    fast, slow = _fake_tiers()
+    imgs, _ = _batch(jax.random.PRNGKey(5))
+    cal = lambda s: platt(s)
+    ref = cascade_classify(fast, slow, cal, imgs, threshold=0.6, capacity=4, resolution=R)
+    fused = cascade_classify(fast, slow, cal, imgs, threshold=0.6, capacity=4,
+                             resolution=R, use_fused=True, platt_ab=(a, b))
+    assert np.array_equal(np.asarray(ref.preds), np.asarray(fused.preds))
+    assert np.array_equal(np.asarray(ref.escalated), np.asarray(fused.escalated))
+    np.testing.assert_allclose(np.asarray(fused.conf), np.asarray(ref.conf), atol=1e-6)
+
+
 def test_degrade_resolution_roundtrip_shapes():
     imgs = jax.random.normal(jax.random.PRNGKey(0), (2, 32, 32, 3))
     lo = degrade_resolution(imgs, 8)

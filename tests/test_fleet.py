@@ -1,0 +1,258 @@
+"""Fleet control plane: batched plan_many == looped plan for every policy,
+churn schedules, partial batches, and the struct-of-arrays state ops."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.netsim import Uplink, mbps, payload_sizes, png_size_model
+from repro.policy import (
+    BandwidthEstimator,
+    FleetRunner,
+    FleetState,
+    PolicyRunner,
+    available_policies,
+    make_policy,
+)
+from repro.serving import ArrivalSchedule, CascadeServer, MultiStreamServer, ServeConfig
+from repro.serving.synthetic import synthetic_streams, synthetic_tiers
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+
+# policies that are exercised through the serving-style fleet path
+FLEET_POLICIES = ("cbo", "optimal", "threshold", "local", "server", "greedy-rate")
+
+
+def _pair(name, n_streams, rng, m=3):
+    """A FleetRunner and S equivalent PolicyRunners with identical state."""
+    resolutions = tuple(4 * (i + 1) for i in range(m))
+    acc = tuple(sorted(rng.uniform(0.5, 0.99, size=m)))
+    deadline = float(rng.choice([0.15, 0.2, 0.3, 0.5]))
+    kw = dict(resolutions=resolutions, acc_server=acc, deadline=deadline,
+              latency=0.05, server_time=0.037,
+              size_of=lambda r: png_size_model(r, base_res=16))
+    fleet = FleetRunner([make_policy(name) for _ in range(n_streams)], bw_init=1.0, **kw)
+    runners = [PolicyRunner(make_policy(name), bw=BandwidthEstimator(estimate_bps=1.0), **kw)
+               for _ in range(n_streams)]
+    bw = rng.uniform(1e5, 5e6, size=n_streams)
+    fleet.bw_est[:] = bw
+    for s in range(n_streams):
+        runners[s].bw.estimate_bps = bw[s]
+        for i in range(int(rng.integers(0, 12))):
+            a, c = i / 30.0, float(rng.uniform(0.2, 0.99))
+            runners[s].add_frame(a, c)
+            fleet.add_frame(s, a, c)
+    return fleet, runners
+
+
+def _assert_plans_match(batch, runners, now):
+    for s, runner in enumerate(runners):
+        ref = runner.plan(now=now)
+        got = batch.plan(s)
+        assert got.offloads == ref.offloads, s
+        assert got.theta == ref.theta, s
+        assert got.resolution == ref.resolution, s
+        assert got.n_frames == ref.n_frames, s
+        # gains/base accuracies may differ from the looped floats only by
+        # summation order (segment reductions vs sequential adds)
+        assert got.total_gain == pytest.approx(ref.total_gain, abs=1e-9), s
+        assert got.base_acc == pytest.approx(ref.base_acc, abs=1e-9), s
+
+
+@pytest.mark.parametrize("name", FLEET_POLICIES)
+def test_plan_many_matches_looped_plan_fuzz(name, rng):
+    """Batched plan_all must reproduce per-stream plan for every registered
+    policy on random ragged backlogs and bandwidths."""
+    for trial in range(25):
+        S = int(rng.integers(1, 9))
+        fleet, runners = _pair(name, S, rng)
+        now = float(rng.choice([0.0, 0.05]))
+        _assert_plans_match(fleet.plan_all(np.full(S, now)), runners, now)
+
+
+def test_registry_is_covered():
+    """Every registered policy is exercised by the fleet fuzz test."""
+    assert set(FLEET_POLICIES) == set(available_policies())
+
+
+def test_cbo_plan_many_matches_under_ties(rng):
+    """Duplicate sizes/confidences force equal busy-times and gains across
+    chains — the batched merge's tie-breaks must still reproduce the
+    per-stream planner's schedule exactly."""
+    for trial in range(60):
+        S = int(rng.integers(1, 10))
+        m = int(rng.integers(1, 3))
+        sizes = tuple(float(rng.choice([1e4, 5e4])) for _ in range(m))
+        acc = tuple(float(rng.choice([0.8, 0.9])) for _ in range(m))
+        kw = dict(resolutions=tuple(range(m)), acc_server=acc, deadline=0.3,
+                  latency=0.05, server_time=0.037,
+                  size_of=lambda r, s=sizes: np.asarray(s)[np.asarray(r, dtype=np.int64) % m])
+        fleet = FleetRunner([make_policy("cbo") for _ in range(S)], bw_init=1e6, **kw)
+        runners = [PolicyRunner(make_policy("cbo"),
+                                bw=BandwidthEstimator(estimate_bps=1e6), **kw)
+                   for _ in range(S)]
+        for s in range(S):
+            for i in range(int(rng.integers(2, 12))):
+                a, c = (i // 2) / 30.0, float(rng.choice([0.4, 0.6]))
+                runners[s].add_frame(a, c)
+                fleet.add_frame(s, a, c)
+        batch = fleet.plan_all(np.zeros(S))
+        for s in range(S):
+            ref, got = runners[s].plan(now=0.0), batch.plan(s)
+            assert got.offloads == ref.offloads and got.theta == ref.theta, (trial, s)
+            assert got.total_gain == ref.total_gain, (trial, s)
+
+
+def test_batched_bandwidth_fold_matches_sequential(rng):
+    """observe_bandwidth must be bit-identical to per-transfer EWMA updates
+    in array order (including the <=1e-9s skip)."""
+    S = 5
+    est0 = rng.uniform(1e5, 1e7, size=S)
+    fleet = FleetRunner([make_policy("cbo") for _ in range(S)], resolutions=(4,),
+                        acc_server=(0.9,), deadline=0.2, latency=0.05,
+                        server_time=0.037, size_of=lambda r: 1e3,
+                        bw_init=est0.copy())
+    seq = [BandwidthEstimator(estimate_bps=float(e)) for e in est0]
+    stream = rng.integers(0, S, size=24)
+    payload = rng.uniform(1e3, 1e5, size=24)
+    seconds = rng.uniform(-0.01, 0.3, size=24)  # a few <= 1e-9 to skip
+    for k in range(24):
+        seq[stream[k]].observe(float(payload[k]), float(seconds[k]))
+    fleet.observe_bandwidth(stream, payload, seconds)
+    for s in range(S):
+        assert fleet.bw_est[s] == seq[s].estimate_bps, s
+
+
+def test_fleet_state_consume_extend_invariants():
+    st = FleetState(3, max_backlog=4)
+    st.extend(np.array([0, 0, 1, 2, 2, 2]), np.arange(6) / 30.0,
+              np.linspace(0.2, 0.7, 6))
+    assert st.lengths.tolist() == [2, 1, 3]
+    # per-stream insertion order is preserved and trimming keeps the newest
+    st.extend(np.array([0, 0, 0]), np.array([1.0, 1.1, 1.2]), np.array([0.9, 0.8, 0.7]))
+    assert st.lengths.tolist() == [4, 1, 3]  # trimmed to max_backlog=4
+    lo, hi = st.offsets[0], st.offsets[1]
+    assert st.arrival[lo:hi].tolist() == [1 / 30.0, 1.0, 1.1, 1.2]
+    # consume removes planned positions; clear wipes whole streams
+    st.consume(np.array([0]), np.array([1]), np.zeros(3, dtype=bool))
+    assert st.lengths.tolist() == [3, 1, 3]
+    st.clear(np.array([False, False, True]))
+    assert st.lengths.tolist() == [3, 1, 0]
+
+
+def _cfg():
+    return ServeConfig(resolutions=(4, 8), acc_server=(0.7, 0.99), batch_size=16,
+                       frame_rate=30.0, deadline=0.2)
+
+
+def _uplink(cfg):
+    return Uplink(bandwidth_bps=mbps(50.0), latency=0.05, server_time=cfg.server_time)
+
+
+@pytest.fixture(scope="module")
+def snapshot():
+    with open(os.path.join(DATA, "multistream_snapshot.json")) as f:
+        return json.load(f)
+
+
+def test_churn_degenerating_to_lockstep_reproduces_snapshot(snapshot):
+    """ArrivalSchedule.churn(join=0, length=N) must reproduce the recorded
+    pre-refactor lockstep metrics exactly."""
+    fast, slow, cal = synthetic_tiers()
+    cfg = _cfg()
+    imgs, labels = synthetic_streams(4, 64)
+    sched = ArrivalSchedule.churn(4, 64, cfg.frame_rate, cfg.deadline, join=0, length=64)
+    agg = MultiStreamServer(cfg, fast, slow, cal, _uplink(cfg), n_streams=4,
+                            policy="cbo").process_streams(imgs, labels, schedule=sched)
+    for m, ref in zip(agg.per_stream, snapshot["per_stream"]):
+        assert m.accuracy == pytest.approx(ref["accuracy"], abs=1e-9)
+        assert m.offload_frac == pytest.approx(ref["offload_frac"], abs=1e-9)
+        assert m.deadline_miss_frac == pytest.approx(ref["deadline_miss_frac"], abs=1e-9)
+        assert m.n_frames == ref["n_frames"]
+    assert agg.n_offloaded == snapshot["n_offloaded"]
+
+
+def test_churn_serves_only_live_slots():
+    """Streams join/leave mid-run: per-stream frame counts must equal their
+    scheduled lifetimes and the engine must stay consistent."""
+    fast, slow, cal = synthetic_tiers()
+    cfg = _cfg()
+    S, N = 6, 70  # includes a trailing partial round (70 % 16 != 0)
+    imgs, labels = synthetic_streams(S, N)
+    join = np.array([0, 0, 8, 16, 30, 40])
+    length = np.array([70, 50, 40, 30, 40, 30])
+    sched = ArrivalSchedule.churn(S, N, cfg.frame_rate, cfg.deadline,
+                                  join=join, length=length)
+    up = _uplink(cfg)
+    agg = MultiStreamServer(cfg, fast, slow, cal, up, n_streams=S).process_streams(
+        imgs, labels, schedule=sched)
+    assert [m.n_frames for m in agg.per_stream] == length.tolist()
+    assert agg.n_frames == int(length.sum())
+    assert up.n_transfers == agg.n_offloaded + agg.n_deadline_miss
+    # a late-joining stream still gets answers for every live frame
+    assert all(len(m.latencies) == l for m, l in zip(agg.per_stream, length))
+
+
+def test_churn_schedule_validates_lifetimes():
+    with pytest.raises(ValueError):
+        ArrivalSchedule.churn(2, 10, 30.0, 0.2, join=8, length=5)
+    with pytest.raises(ValueError):
+        ArrivalSchedule.churn(2, 10, 30.0, 0.2, join=-1)
+
+
+def test_cascade_server_serves_trailing_partial_batch():
+    """len(frames) % batch_size != 0 used to silently drop the tail."""
+    fast, slow, cal = synthetic_tiers()
+    cfg = _cfg()
+    imgs, labels = synthetic_streams(1, 70)
+    m = CascadeServer(cfg, fast, slow, cal, _uplink(cfg)).process_stream(imgs[0], labels[0])
+    assert m.n_frames == 70
+    assert len(m.latencies) == 70
+
+
+def test_multistream_serves_trailing_partial_batch():
+    fast, slow, cal = synthetic_tiers()
+    cfg = _cfg()
+    imgs, labels = synthetic_streams(3, 37)
+    agg = MultiStreamServer(cfg, fast, slow, cal, _uplink(cfg),
+                            n_streams=3).process_streams(imgs, labels)
+    assert agg.n_frames == 3 * 37
+
+
+def test_png_size_model_vectorized():
+    res = np.array([45, 90, 134, 179, 224])
+    out = png_size_model(res)
+    assert out.shape == res.shape
+    for r, v in zip(res, out):
+        assert v == png_size_model(int(r))
+    assert isinstance(png_size_model(224), float)
+
+
+def test_payload_sizes_falls_back_for_scalar_only_callables():
+    def scalar_only(r):
+        if np.ndim(r):
+            raise TypeError("scalar only")
+        return float(r) * 2.0
+
+    res = np.array([3, 5, 7])
+    np.testing.assert_allclose(payload_sizes(scalar_only, res), [6.0, 10.0, 14.0])
+    np.testing.assert_allclose(payload_sizes(png_size_model, res),
+                               [png_size_model(int(r)) for r in res])
+
+
+def test_fleet_runner_groups_heterogeneous_policies():
+    policies = [make_policy("cbo"), make_policy("local"), make_policy("cbo"),
+                make_policy("threshold", theta=0.4), make_policy("threshold", theta=0.6)]
+    fleet = FleetRunner(policies, resolutions=(4, 8), acc_server=(0.7, 0.99),
+                        deadline=5.0, latency=0.01, server_time=0.01,
+                        size_of=lambda r: 1e3 * r, bw_init=mbps(50.0))
+    # cbo streams share one group; distinct threshold configs do not
+    assert len(fleet.groups) == 4
+    for s in range(5):
+        fleet.add_frame(s, 0.0, 0.3)
+    batch = fleet.plan_all(np.zeros(5))
+    assert batch.plan(1).offloads == []  # local never offloads
+    assert batch.plan(0).offloads  # generous env: cbo offloads
+    # threshold theta=0.4 keeps conf=0.3 < 0.4 -> offloads; .6 likewise
+    assert batch.plan(3).offloads and batch.plan(4).offloads

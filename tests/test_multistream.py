@@ -138,9 +138,14 @@ def test_arrival_schedule_interleaves_streams():
     flat = sched.arrival.T.reshape(-1)
     assert np.all(np.diff(flat) > 0)
     rounds = list(sched.rounds(16))
-    assert [s for s, _ in rounds] == [0, 16]
+    assert [s for s, _, _ in rounds] == [0, 16]
     assert rounds[0][1].shape == (4, 16)
+    assert rounds[0][2].all()  # lockstep: every slot valid
     assert sched.horizon == pytest.approx(sched.arrival.max() + 0.2)
+    # trailing partial rounds are yielded, not dropped
+    ragged = list(ArrivalSchedule.interleaved(4, 37, frame_rate=30.0, deadline=0.2).rounds(16))
+    assert [s for s, _, _ in ragged] == [0, 16, 32]
+    assert ragged[-1][1].shape == (4, 5)
 
 
 def test_jain_index_bounds():
