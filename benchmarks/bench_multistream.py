@@ -15,9 +15,14 @@ Default stack is a tiny synthetic two-tier pair (runs in seconds, no
 training); ``--stack models`` uses the trained int4/fp stack from
 ``benchmarks.common`` like the other paper benchmarks.
 
+``--cells`` / ``--replicas`` / ``--placement`` rerun the sweep on an edge
+fabric (``src/repro/net/``) instead of the legacy single uplink — see
+``bench_fabric.py`` for the dedicated topology sweep.
+
   PYTHONPATH=src:benchmarks python benchmarks/bench_multistream.py
   PYTHONPATH=src:benchmarks python benchmarks/bench_multistream.py --streams 64,256,1024 --churn
   PYTHONPATH=src:benchmarks python benchmarks/bench_multistream.py --bw 0.5 --scheduler fifo
+  PYTHONPATH=src:benchmarks python benchmarks/bench_multistream.py --cells 4 --replicas 4
 """
 from __future__ import annotations
 
@@ -108,12 +113,27 @@ def run(args=None) -> dict:
         return Uplink(bandwidth_bps=mbps(args.bw), latency=args.latency,
                       server_time=cfg.server_time, jitter=args.jitter, seed=args.seed)
 
+    def fresh_fabric(S):
+        """None when the topology is degenerate (legacy uplink path keeps
+        its exact floats); an EdgeFabric otherwise."""
+        if args.cells == 1 and args.replicas == 1:
+            return None
+        from repro.net import EdgeFabric
+
+        return EdgeFabric.build(
+            n_streams=S, n_cells=args.cells, n_replicas=args.replicas,
+            bandwidth_bps=mbps(args.bw), latency=args.latency,
+            server_time=cfg.server_time, placement=args.placement,
+            jitter=args.jitter, seed=args.seed, serial_replicas=args.replicas > 1)
+
     rows = []
     single_row = None
     for S in args.streams:
         frames, labels = make_streams(S, args.frames)
-        srv = MultiStreamServer(cfg, fast, slow, calibrate, fresh_uplink(), n_streams=S,
-                                scheduler=FairScheduler(args.scheduler))
+        fab = fresh_fabric(S)
+        srv = MultiStreamServer(cfg, fast, slow, calibrate,
+                                fresh_uplink() if fab is None else None, n_streams=S,
+                                scheduler=FairScheduler(args.scheduler), fabric=fab)
         m = srv.process_streams(frames, labels)
         row = {"n_streams": S, **m.summary()}
         rows.append(row)
@@ -129,8 +149,10 @@ def run(args=None) -> dict:
 
         if args.churn and S > 1:  # dynamic fleet: staggered join/leave
             sched = churn_schedule(S, frames.shape[1], cfg, seed=args.seed)
-            srv = MultiStreamServer(cfg, fast, slow, calibrate, fresh_uplink(), n_streams=S,
-                                    scheduler=FairScheduler(args.scheduler))
+            fab = fresh_fabric(S)
+            srv = MultiStreamServer(cfg, fast, slow, calibrate,
+                                    fresh_uplink() if fab is None else None, n_streams=S,
+                                    scheduler=FairScheduler(args.scheduler), fabric=fab)
             mc = srv.process_streams(frames, labels, schedule=sched)
             crow = {"n_streams": S, "scenario": "churn",
                     "served_frac": round(mc.n_frames / labels.size, 4), **mc.summary()}
@@ -140,7 +162,9 @@ def run(args=None) -> dict:
 
     out = {"config": {"bw_mbps": args.bw, "latency": args.latency, "fps": args.fps,
                       "deadline": args.deadline, "frames": args.frames,
-                      "scheduler": args.scheduler, "stack": args.stack},
+                      "scheduler": args.scheduler, "stack": args.stack,
+                      "cells": args.cells, "replicas": args.replicas,
+                      "placement": args.placement},
            "sweep": rows, "single_stream_ref": single_row}
     from benchmarks.common import out_path
 
@@ -165,6 +189,12 @@ def parse_args(argv=None):
     ap.add_argument("--churn", action="store_true",
                     help="also run a dynamic-fleet scenario per N (staggered "
                          "join/leave, ragged stream lifetimes)")
+    ap.add_argument("--cells", type=int, default=1,
+                    help="radio cells (edge fabric; 1 = legacy single uplink)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="slow-tier replicas (edge fabric; 1 = legacy fixed delay)")
+    ap.add_argument("--placement", choices=("round_robin", "jsq", "least_land"),
+                    default="round_robin")
     return ap.parse_args(argv)
 
 

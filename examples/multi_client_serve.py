@@ -10,8 +10,17 @@ schedules transfers with weighted fair queueing.
 clients join mid-run with ragged lifetimes, exercising the batched
 ``FleetRunner`` control plane's admit/retire path.
 
+``--cells`` / ``--replicas`` / ``--placement`` / ``--trace`` put the fleet
+behind an edge fabric (``src/repro/net/``): clients partitioned across C
+radio cells (one serial uplink each, optionally replaying a synthetic
+LTE/WiFi bandwidth trace), escalations sharded across K slow-tier replica
+queues.  The defaults (1 cell, 1 replica, no trace) reproduce the legacy
+single-uplink pipeline exactly.
+
   PYTHONPATH=src:benchmarks python examples/multi_client_serve.py --streams 8 --bw 5
   PYTHONPATH=src python examples/multi_client_serve.py --streams 8 --synthetic --churn
+  PYTHONPATH=src python examples/multi_client_serve.py --streams 16 --synthetic \\
+      --cells 4 --replicas 2 --placement jsq --trace lte
 """
 import argparse
 import os
@@ -36,6 +45,16 @@ def main():
     ap.add_argument("--churn", action="store_true",
                     help="dynamic fleet: half the clients join mid-run with "
                          "ragged lifetimes (staggered join/leave)")
+    ap.add_argument("--cells", type=int, default=1,
+                    help="radio cells (one serial uplink each; streams "
+                         "partitioned round-robin)")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="slow-tier replicas (per-replica serial queues)")
+    ap.add_argument("--placement", choices=("round_robin", "jsq", "least_land"),
+                    default="round_robin", help="escalation -> replica placement")
+    ap.add_argument("--trace", choices=("none", "lte", "wifi", "regime"),
+                    default="none", help="per-cell synthetic bandwidth trace "
+                                         "(scaled to --bw as the mean rate)")
     args = ap.parse_args()
 
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -72,10 +91,29 @@ def main():
         acc_note = f"  (fast tier alone: {stack.acc_fast:.3f}; slow ceiling: {stack.acc_slow:.3f})"
 
     uplink = Uplink(bandwidth_bps=mbps(args.bw), latency=args.latency, server_time=cfg.server_time)
+    fabric = None
+    if args.cells > 1 or args.replicas > 1 or args.trace != "none":
+        from repro.net import EdgeFabric, lte_trace, regime_shift_trace, wifi_trace
+
+        make_trace = {
+            "none": lambda c: None,
+            "lte": lambda c: lte_trace(120.0, mean_mbps=args.bw, seed=c),
+            "wifi": lambda c: wifi_trace(120.0, good_mbps=args.bw, bad_mbps=args.bw / 8, seed=c),
+            "regime": lambda c: regime_shift_trace((args.bw, args.bw / 8), period=10.0),
+        }[args.trace]
+        fabric = EdgeFabric.build(
+            n_streams=args.streams, n_cells=args.cells, n_replicas=args.replicas,
+            bandwidth_bps=mbps(args.bw), latency=args.latency,
+            server_time=cfg.server_time, placement=args.placement,
+            traces=[make_trace(c) for c in range(args.cells)],
+            serial_replicas=args.replicas > 1)
     names = args.policy.split(",")
     policy = names[0] if len(names) == 1 else (lambda s: names[s % len(names)])
-    server = MultiStreamServer(cfg, fast, slow, calibrate, uplink, n_streams=args.streams,
-                               scheduler=FairScheduler(args.scheduler), policy=policy)
+    server = MultiStreamServer(cfg, fast, slow, calibrate,
+                               uplink if fabric is None else None,
+                               n_streams=args.streams,
+                               scheduler=FairScheduler(args.scheduler), policy=policy,
+                               fabric=fabric)
     schedule = None
     if args.churn:
         from benchmarks.bench_multistream import churn_schedule

@@ -7,16 +7,36 @@ megabits/s at the API surface (as in the paper's figures); bytes internally.
 The uplink is the shared, contended resource in multi-stream serving: every
 transfer — whichever stream submitted it — serializes through the same
 queue. ``transmit`` handles one transfer; ``transmit_batch`` handles a whole
-round of transfers at once (vectorized Lindley recursion when the bandwidth
-is constant) and is what the multi-stream engine uses. Both update the same
-``_busy_until`` cursor and the same contention counters, so they can be
-freely mixed.
+round of transfers at once (vectorized Lindley recursion, including the
+time-varying-bandwidth case via a fixed-point iteration) and is what the
+multi-stream engine uses. Both update the same ``_busy_until`` cursor and
+the same contention counters, so they can be freely mixed.
+
+Bandwidth can vary with time two ways, composable:
+
+  * ``jitter`` — a deterministic pseudo-random per-second factor (OU-ish
+    walk indexed by the integer second, seeded);
+  * ``trace``  — a ``repro.net.traces.BandwidthTrace`` (piecewise-constant
+    replay of a recorded/synthetic cellular or WiFi trace); when set it
+    replaces ``bandwidth_bps`` as the base rate and jitter multiplies on
+    top.
+
+``upload_batch`` is the wire-only primitive (returns transmission-complete
+times, no server/latency added); the edge fabric (``repro.net.fabric``)
+uses it to route uploads through per-cell uplinks and then through a
+sharded slow tier.  ``transmit_batch`` is exactly ``upload_batch`` plus the
+lumped ``server_time + latency`` — the paper's single-server abstraction.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Optional
 
 import numpy as np
+
+# cap on fixed-point sweeps before falling back to the exact serial loop;
+# real traces converge in 2-4 sweeps, the cap only guards adversarial cases
+_FIXED_POINT_SWEEPS = 50
 
 
 def mbps(x: float) -> float:
@@ -26,29 +46,76 @@ def mbps(x: float) -> float:
 
 @dataclass
 class Uplink:
-    bandwidth_bps: float  # bytes per second
+    bandwidth_bps: float  # bytes per second (base rate; trace overrides)
     latency: float  # seconds (one-way + reply, lumped as L in the paper)
     server_time: float  # T^o
     jitter: float = 0.0  # relative bandwidth jitter (OU-ish random walk)
     seed: int = 0
+    trace: Optional[object] = None  # BandwidthTrace (duck-typed: .bandwidth_at)
     _busy_until: float = 0.0
-    _rng: np.random.Generator = field(default=None, repr=False)
+    # per-second jitter factors, cached for exactly the seconds touched
+    # (sorted keys + values, so lookups stay vectorized and a transfer at
+    # t=1e8 costs one entry, not a dense 0..1e8 table)
+    _jit_keys: Optional[np.ndarray] = field(default=None, repr=False)
+    _jit_vals: Optional[np.ndarray] = field(default=None, repr=False)
     # contention accounting (updated by transmit / transmit_batch)
     n_transfers: int = 0
     busy_seconds: float = 0.0  # total wire time
     queued_seconds: float = 0.0  # total head-of-line blocking across transfers
 
     def __post_init__(self):
-        self._rng = np.random.default_rng(self.seed)
+        self._jit_keys = np.zeros(0, dtype=np.int64)
+        self._jit_vals = np.zeros(0, dtype=np.float64)
+
+    # -- bandwidth model -------------------------------------------------- #
+
+    def _jitter_factors(self, seconds: np.ndarray) -> np.ndarray:
+        """Per-second factors for the requested integer seconds, cached.
+
+        Each second's factor is drawn from its own ``default_rng((seed, s))``
+        — a deterministic stream per (seed, second) pair — so growing the
+        cache never changes previously observed values, and uplinks with
+        different seeds get *independent* channels (additive ``seed + s``
+        would make seed c a c-second time shift of seed 0, turning
+        multi-cell jitter sweeps into copies of one channel).  Only the
+        seconds actually touched are materialized (sorted key/value
+        arrays, ``searchsorted`` lookup), keeping cost independent of how
+        far into simulated time a transfer lands.
+        """
+        if len(seconds) == 0:
+            return np.zeros(0, dtype=np.float64)
+        uniq = np.unique(seconds)
+        new = uniq[~np.isin(uniq, self._jit_keys)]
+        if len(new):
+            vals = np.asarray([
+                np.clip(1.0 + self.jitter *
+                        np.random.default_rng((self.seed, int(s))).standard_normal(),
+                        0.2, 2.0)
+                for s in new])
+            keys = np.concatenate([self._jit_keys, new])
+            order = np.argsort(keys)
+            self._jit_keys = keys[order]
+            self._jit_vals = np.concatenate([self._jit_vals, vals])[order]
+        return self._jit_vals[np.searchsorted(self._jit_keys, seconds)]
+
+    def bandwidth_at(self, t) -> np.ndarray:
+        """Vectorized instantaneous bandwidth (bytes/s) at times ``t``."""
+        t = np.asarray(t, dtype=np.float64)
+        base = (np.asarray(self.trace.bandwidth_at(t), dtype=np.float64)
+                if self.trace is not None
+                else np.full(t.shape, self.bandwidth_bps))
+        if self.jitter > 0:
+            base = base * self._jitter_factors(t.astype(np.int64))
+        return base
+
+    @property
+    def _varying(self) -> bool:
+        return self.jitter > 0 or self.trace is not None
 
     def current_bandwidth(self, t: float) -> float:
-        if self.jitter <= 0:
-            return self.bandwidth_bps
-        # deterministic pseudo-random walk indexed by the integer second
-        step = int(t)
-        g = np.random.default_rng(self.seed + step)
-        factor = float(np.clip(1.0 + self.jitter * g.standard_normal(), 0.2, 2.0))
-        return self.bandwidth_bps * factor
+        return float(self.bandwidth_at(np.asarray([t]))[0])
+
+    # -- transfers --------------------------------------------------------- #
 
     def transmit(self, payload_bytes: float, t_submit: float) -> float:
         """Queue a transfer; returns the time the *reply* lands."""
@@ -61,41 +128,80 @@ class Uplink:
         self.queued_seconds += start - t_submit
         return end_tx + self.server_time + self.latency
 
-    def transmit_batch(self, payload_bytes, t_submit) -> np.ndarray:
-        """Queue many transfers in the given order; returns reply-land times.
+    def _lindley(self, tx: np.ndarray, subs: np.ndarray) -> np.ndarray:
+        """end_i = max(t_submit_i, end_{i-1}) + tx_i with end_{-1} = busy,
+        as one cumsum + running max (max-plus / Lindley recursion)."""
+        csum = np.cumsum(tx)
+        # max(t_submit_j, busy_0) - csum_{j-1}, then running max restores it
+        eff = np.maximum(subs, self._busy_until) - (csum - tx)
+        return np.maximum.accumulate(eff) + csum
 
-        Transfers serialize in array order (the scheduler decides that order
-        — see ``serving/scheduler.py``), exactly as if ``transmit`` had been
-        called once per element. With constant bandwidth the whole queue is
-        one vectorized max-plus (Lindley) recursion:
+    def upload_batch(self, payload_bytes, t_submit) -> np.ndarray:
+        """Queue many transfers in the given order; returns the times each
+        *transmission* completes (no server/latency) and updates the busy
+        cursor + contention counters.
 
-            end_i = max_{j<=i}( max(t_submit_j, busy_0) + sum_{k=j..i} tx_k )
-
-        computed with a cumsum + running max. With jitter the bandwidth
-        depends on each transfer's start time, so we fall back to the serial
-        loop (still a single call at the API surface).
+        Transfers serialize in array order (the scheduler decides that
+        order — see ``serving/scheduler.py``), exactly as if ``transmit``
+        had been called once per element.  Constant bandwidth is one
+        Lindley recursion.  Time-varying bandwidth (jitter and/or trace)
+        makes each transfer's rate depend on its start time, which depends
+        on the previous end — a serial chain.  We solve it by fixed-point
+        iteration: guess the starts, look every transfer's rate up in one
+        vectorized pass, re-run the Lindley recursion, repeat until the
+        starts stop moving.  Any fixed point satisfies the forward
+        recursion exactly, so the result equals the serial loop's; traces
+        and jitter change rates only at piecewise boundaries, so 2-4
+        sweeps converge.  (The pre-vectorization fallback — a Python loop
+        per transfer — survives only as the safety net if the iteration
+        fails to settle.)
         """
         payloads = np.asarray(payload_bytes, dtype=np.float64)
         subs = np.asarray(t_submit, dtype=np.float64)
         if payloads.size == 0:
             return np.zeros(0, dtype=np.float64)
-        if self.jitter > 0:
-            return np.asarray([self.transmit(float(p), float(t)) for p, t in zip(payloads, subs)])
-        tx = payloads / self.bandwidth_bps
-        csum = np.cumsum(tx)
-        # max(t_submit_j, busy_0) - csum_{j-1}, then running max restores the recursion
-        eff = np.maximum(subs, self._busy_until) - (csum - tx)
-        end_tx = np.maximum.accumulate(eff) + csum
+        if not self._varying:
+            tx = payloads / self.bandwidth_bps
+            end_tx = self._lindley(tx, subs)
+        else:
+            starts = np.maximum(subs, self._busy_until)
+            end_tx = None
+            for _ in range(_FIXED_POINT_SWEEPS):
+                tx = payloads / self.bandwidth_at(starts)
+                end_tx = self._lindley(tx, subs)
+                new_starts = end_tx - tx
+                if np.array_equal(new_starts, starts):
+                    break
+                starts = new_starts
+            else:  # did not settle: fall back to the exact serial loop
+                end_tx = np.empty(len(payloads), dtype=np.float64)
+                busy = self._busy_until
+                for i in range(len(payloads)):
+                    s = max(subs[i], busy)
+                    busy = s + payloads[i] / self.current_bandwidth(s)
+                    end_tx[i] = busy
+                tx = end_tx - np.maximum(subs, np.r_[self._busy_until, end_tx[:-1]])
         starts = end_tx - tx
         self._busy_until = float(end_tx[-1])
         self.n_transfers += payloads.size
         self.busy_seconds += float(tx.sum())
         self.queued_seconds += float(np.clip(starts - subs, 0.0, None).sum())
+        return end_tx
+
+    def transmit_batch(self, payload_bytes, t_submit) -> np.ndarray:
+        """``upload_batch`` plus the lumped server+latency tail: reply-land
+        times under the paper's single-server abstraction."""
+        end_tx = self.upload_batch(payload_bytes, t_submit)
+        if end_tx.size == 0:
+            return end_tx
         return end_tx + self.server_time + self.latency
 
     def would_land_at(self, payload_bytes: float, t_submit: float) -> float:
-        bw = self.current_bandwidth(max(t_submit, self._busy_until))
+        """Predicted reply-land time of the *next* transfer, without queueing
+        it: the clamped start is computed once and the bandwidth is sampled
+        at that same instant — exactly what ``transmit`` will do."""
         start = max(t_submit, self._busy_until)
+        bw = self.current_bandwidth(start)
         return start + payload_bytes / bw + self.server_time + self.latency
 
     def utilization(self, horizon: float) -> float:
@@ -140,8 +246,17 @@ def payload_sizes(size_of, res) -> np.ndarray:
                       dtype=np.float64).reshape(res.shape)
 
 
-def transfer_seconds(lands, t_submit, *, latency: float, server_time: float) -> np.ndarray:
+def transfer_seconds(lands, t_submit, *, latency: float, server_time) -> np.ndarray:
     """Observed wire time per transfer: reply-land minus submit minus the
-    fixed RTT components — what bandwidth estimators feed on, batched."""
+    known RTT components — what bandwidth estimators feed on, batched.
+    ``server_time`` may be a scalar (the paper's fixed T^o) or a
+    per-transfer array (each reply reporting its replica's actual service
+    time, as the edge fabric does for heterogeneous pools).
+
+    With a sharded slow tier the replies also carry server *queueing*
+    delay, which this deliberately does not separate out: a device can
+    only measure round-trip time, so replica contention surfaces to the
+    estimators as reduced effective bandwidth (and the policies back off),
+    exactly as a congested cell would."""
     return np.asarray(lands, dtype=np.float64) - np.asarray(t_submit, dtype=np.float64) \
         - latency - server_time

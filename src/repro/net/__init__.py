@@ -1,0 +1,37 @@
+"""The edge fabric: network topology for fleet-scale serving.
+
+Generalizes ``core/netsim.py``'s single shared uplink into the shape real
+edge deployments have — many radio cells, a sharded slow tier, and
+non-stationary bandwidth:
+
+  * ``fabric``    — ``EdgeFabric`` / ``Cell``: the topology object the
+                    serving engines route escalations through;
+  * ``replicas``  — ``ReplicaPool``: K slow-tier replicas, per-replica
+                    serial queues (vectorized Lindley recursion each);
+  * ``placement`` — ``Placement``: round_robin / jsq / least_land
+                    replica assignment (+ ``assign_looped`` reference);
+  * ``traces``    — ``BandwidthTrace`` replay + synthetic LTE / WiFi /
+                    regime-shift generators.
+
+``EdgeFabric.degenerate(uplink)`` (1 cell, 1 replica, constant bandwidth)
+reproduces the legacy single-uplink pipeline bit-for-bit — the regression
+anchor that lets every pre-fabric snapshot keep pinning the same floats.
+See docs/network.md.
+"""
+from repro.net.fabric import Cell, EdgeFabric
+from repro.net.placement import PLACEMENT_POLICIES, Placement, assign_looped
+from repro.net.replicas import ReplicaPool
+from repro.net.traces import BandwidthTrace, lte_trace, regime_shift_trace, wifi_trace
+
+__all__ = [
+    "Cell",
+    "EdgeFabric",
+    "ReplicaPool",
+    "Placement",
+    "PLACEMENT_POLICIES",
+    "assign_looped",
+    "BandwidthTrace",
+    "lte_trace",
+    "wifi_trace",
+    "regime_shift_trace",
+]

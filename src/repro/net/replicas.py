@@ -1,0 +1,109 @@
+"""Sharded slow tier: K server replicas, each a serial queue.
+
+The paper's edge server is an infinite-capacity fixed delay — every
+offload pays ``server_time`` and nothing ever queues behind another
+request.  That abstraction is what breaks first at fleet scale: the N=64+
+sweeps hammer one implicit server with hundreds of escalations per round.
+``ReplicaPool`` makes the slow tier a real resource: K replicas, each with
+its own busy-until cursor and its own ``server_time`` (heterogeneous
+replicas allowed), processing assigned requests in arrival order via the
+same vectorized max-plus (Lindley) recursion the uplink uses — grouped by
+replica, one recursion per replica, no per-request Python.
+
+``serial=False`` recovers the paper's infinite-capacity abstraction
+(``done = arrive + server_time``, nothing queues): the degenerate edge
+fabric uses it so a 1-cell/1-replica fabric reproduces the legacy
+single-uplink metrics bit-for-bit.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["ReplicaPool"]
+
+
+class ReplicaPool:
+    """K slow-tier replicas with per-replica queues and service times."""
+
+    def __init__(self, n_replicas: int, server_time, *, serial: bool = True):
+        if n_replicas < 1:
+            raise ValueError("need at least one replica")
+        self.n_replicas = int(n_replicas)
+        st = np.broadcast_to(np.asarray(server_time, dtype=np.float64),
+                             (self.n_replicas,)).copy()
+        if (st < 0).any():
+            raise ValueError("server_time must be >= 0")
+        self.server_time = st
+        self.serial = bool(serial)
+        self.busy_until = np.zeros(self.n_replicas, dtype=np.float64)
+        # contention accounting, per replica
+        self.n_jobs = np.zeros(self.n_replicas, dtype=np.int64)
+        self.busy_seconds = np.zeros(self.n_replicas, dtype=np.float64)
+        self.queued_seconds = np.zeros(self.n_replicas, dtype=np.float64)
+
+    @property
+    def nominal_server_time(self) -> float:
+        """The scalar T^o planners/estimators assume (mean over replicas)."""
+        return float(self.server_time.mean())
+
+    def process(self, t_arrive, replica) -> np.ndarray:
+        """Serve one batch: each request lands on ``replica[i]`` when its
+        upload finishes at ``t_arrive[i]``; returns service-completion
+        times (reply latency is the fabric's concern, not the pool's).
+
+        Serial replicas serve their requests in arrival order (ties keep
+        batch order): within each replica the completion times follow
+        ``done_i = max(arrive_i, done_{i-1}) + server_time`` — one Lindley
+        recursion per replica over the batch, carried across batches by
+        ``busy_until``.
+        """
+        t_arrive = np.asarray(t_arrive, dtype=np.float64)
+        replica = np.asarray(replica, dtype=np.int64)
+        if t_arrive.shape != replica.shape:
+            raise ValueError("t_arrive and replica must have matching shapes")
+        if len(t_arrive) == 0:
+            return np.zeros(0, dtype=np.float64)
+        if (replica < 0).any() or (replica >= self.n_replicas).any():
+            raise ValueError("replica id out of range")
+        st = self.server_time[replica]
+        if not self.serial:  # infinite-capacity fixed delay (paper semantics)
+            done = t_arrive + st
+            self.n_jobs += np.bincount(replica, minlength=self.n_replicas)
+            self.busy_seconds += np.bincount(replica, weights=st,
+                                             minlength=self.n_replicas)
+            np.maximum.at(self.busy_until, replica, done)  # last-completion marker
+            return done
+        done = np.empty(len(t_arrive), dtype=np.float64)
+        order = np.lexsort((np.arange(len(t_arrive)), t_arrive, replica))
+        r_s, a_s, s_s = replica[order], t_arrive[order], st[order]
+        seg = np.r_[0, np.flatnonzero(np.diff(r_s)) + 1]  # segment starts
+        csum = np.cumsum(s_s)
+        excl = csum - s_s
+        excl -= np.repeat(excl[seg], np.diff(np.r_[seg, len(r_s)]))
+        csum_seg = excl + s_s  # per-replica inclusive service cumsum
+        eff = np.maximum(a_s, self.busy_until[r_s]) - excl
+        for a, b in zip(seg, np.r_[seg[1:], len(r_s)]):  # runmax per replica
+            eff[a:b] = np.maximum.accumulate(eff[a:b])
+        done_s = eff + csum_seg
+        starts = done_s - s_s
+        done[order] = done_s
+        # fold the batch into the persistent per-replica state
+        last = np.r_[seg[1:], len(r_s)] - 1
+        self.busy_until[r_s[last]] = done_s[last]
+        self.n_jobs += np.bincount(replica, minlength=self.n_replicas)
+        self.busy_seconds += np.bincount(r_s, weights=s_s, minlength=self.n_replicas)
+        self.queued_seconds += np.bincount(
+            r_s, weights=np.clip(starts - a_s, 0.0, None), minlength=self.n_replicas)
+        return done
+
+    def utilization(self, horizon: float) -> np.ndarray:
+        """Per-replica service time over [0, horizon].  For serial replicas
+        > 1.0 means overload; a ``serial=False`` pool serves concurrently,
+        so its ratio measures offered load, not saturation."""
+        return self.busy_seconds / max(horizon, 1e-12)
+
+    def reset(self):
+        self.busy_until[:] = 0.0
+        self.n_jobs[:] = 0
+        self.busy_seconds[:] = 0.0
+        self.queued_seconds[:] = 0.0

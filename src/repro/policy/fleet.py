@@ -82,7 +82,7 @@ class FleetState:
     the same thing on both paths.
     """
 
-    def __init__(self, n_streams: int, max_backlog=64):
+    def __init__(self, n_streams: int, max_backlog=64, cell_id=None):
         self.n_streams = int(n_streams)
         self.arrival = np.zeros(0, dtype=np.float64)
         self.conf = np.zeros(0, dtype=np.float64)
@@ -93,6 +93,13 @@ class FleetState:
         # None (unbounded) is encoded as a negative sentinel
         self.max_backlog = np.asarray(
             [-1 if b is None else int(b) for b in mb], dtype=np.int64)
+        # the fleet's topology partition: stream s lives in cell_id[s]
+        # (all zeros = the single-uplink world; set by the serving engine
+        # when an EdgeFabric is attached)
+        self.cell_id = (np.zeros(n_streams, dtype=np.int64) if cell_id is None
+                        else np.asarray(cell_id, dtype=np.int64))
+        if len(self.cell_id) != self.n_streams:
+            raise ValueError("cell_id must have one entry per stream")
 
     def __len__(self) -> int:
         return len(self.arrival)
@@ -172,7 +179,8 @@ class FleetState:
         streams = np.asarray(streams, dtype=np.int64)
         if len(streams) == self.n_streams and np.array_equal(streams, np.arange(self.n_streams)):
             return self
-        sub = FleetState(len(streams), max_backlog=self.max_backlog[streams])
+        sub = FleetState(len(streams), max_backlog=self.max_backlog[streams],
+                         cell_id=self.cell_id[streams])
         local = np.full(self.n_streams, -1, dtype=np.int64)
         local[streams] = np.arange(len(streams))
         sel = local[self.stream_id] >= 0
@@ -256,7 +264,8 @@ class FleetRunner:
 
     def __init__(self, policies: Sequence, *, resolutions: tuple, acc_server: tuple,
                  deadline: float, latency: float, server_time: float, size_of,
-                 bw_init: float | np.ndarray = 1e6, bw_alpha: float = 0.3):
+                 bw_init: float | np.ndarray = 1e6, bw_alpha: float = 0.3,
+                 cell_id: np.ndarray | None = None):
         from repro.core.netsim import payload_sizes
 
         self.policies = list(policies)
@@ -269,9 +278,12 @@ class FleetRunner:
         self.server_time = float(server_time)
         self.sizes = payload_sizes(size_of, np.asarray(self.resolutions))
         self.bw_alpha = float(bw_alpha)
+        # under an edge fabric, ``bw_init`` is the (S,) per-cell prior and
+        # each stream's EWMA tracks its own cell's uplink from then on
         self.bw_est = np.broadcast_to(np.asarray(bw_init, dtype=np.float64), (S,)).copy()
         self.state = FleetState(
-            S, max_backlog=[getattr(p, "max_backlog", None) for p in self.policies])
+            S, max_backlog=[getattr(p, "max_backlog", None) for p in self.policies],
+            cell_id=cell_id)
         self._prune = np.asarray([getattr(p, "prune_expired", True) for p in self.policies])
         self._oneshot = np.asarray([isinstance(p, OneShotPolicy) for p in self.policies])
         groups: dict[tuple, list[int]] = {}
@@ -287,7 +299,8 @@ class FleetRunner:
         # "all local" instead of dividing by zero inside the DP
         return EnvBatch(bandwidth=np.maximum(self.bw_est, 1.0), latency=self.latency,
                         server_time=self.server_time, deadline=self.deadline,
-                        acc_server=self.acc_server, sizes=self.sizes)
+                        acc_server=self.acc_server, sizes=self.sizes,
+                        cell_id=self.state.cell_id)
 
     def env(self, s: int) -> Env:
         return self.env_batch().for_stream(s)

@@ -15,6 +15,12 @@ All of them speak the batched fleet path too (``plan_many`` — see
 ``policy/fleet.py``): ``cbo``, ``threshold``, ``local`` and ``server``
 plan S backlogs in one set of numpy segment operations; the others fall
 back to the looped default in ``BacklogPolicy``.
+
+Under an edge fabric (``repro/net``) no policy needs topology code: the
+``EnvBatch.bandwidth`` vector each ``plan_many`` consumes is per-stream,
+and each stream's EWMA tracks its own cell's uplink, so every policy
+below automatically plans against the stream's cell (``EnvBatch.cell_id``
+exposes the partition for policies that want more).
 """
 from __future__ import annotations
 

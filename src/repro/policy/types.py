@@ -13,6 +13,7 @@ vocabulary of the batched ``plan_many`` path (see ``policy/fleet.py``).
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
 import numpy as np
 
@@ -55,7 +56,14 @@ class EnvBatch:
     """One ``Env`` snapshot for S streams: per-stream bandwidth estimates,
     shared link/deadline scalars, and the (m,) payload-size vector that
     every stream's frames share (``Frame.sizes`` is per-config, not
-    per-frame)."""
+    per-frame).
+
+    Under an edge fabric the (S,) bandwidth vector is per-*cell* in
+    spirit: each stream's EWMA tracks its own cell's uplink (that is where
+    its transfers serialize), so ``plan_many`` automatically plans against
+    the stream's cell.  ``cell_id`` carries the partition for policies
+    that want topology awareness; ``None`` means the single-uplink world.
+    """
 
     bandwidth: np.ndarray  # (S,) uplink bytes/s, floored at 1.0
     latency: float
@@ -63,6 +71,7 @@ class EnvBatch:
     deadline: float
     acc_server: tuple[float, ...]
     sizes: np.ndarray  # (m,) payload bytes per resolution
+    cell_id: Optional[np.ndarray] = None  # (S,) int cell per stream; None = one cell
 
     @property
     def n_streams(self) -> int:
@@ -80,7 +89,8 @@ class EnvBatch:
     def subset(self, streams: np.ndarray) -> "EnvBatch":
         return EnvBatch(bandwidth=self.bandwidth[streams], latency=self.latency,
                         server_time=self.server_time, deadline=self.deadline,
-                        acc_server=self.acc_server, sizes=self.sizes)
+                        acc_server=self.acc_server, sizes=self.sizes,
+                        cell_id=None if self.cell_id is None else self.cell_id[streams])
 
 
 @dataclass

@@ -2,8 +2,10 @@
 
 Modules:
   * ``engine``    — ``CascadeServer`` (single stream) and
-                    ``MultiStreamServer`` (N streams, shared uplink,
-                    batched ``FleetRunner`` control plane);
+                    ``MultiStreamServer`` (N streams routed through an
+                    edge fabric — cells x slow-tier replicas, see
+                    ``repro.net`` / docs/network.md — with a batched
+                    ``FleetRunner`` control plane);
   * ``events``    — vectorized arrival/escalation event queues, incl.
                     dynamic-fleet churn schedules (``ArrivalSchedule.churn``);
   * ``scheduler`` — fair uplink scheduling across streams;

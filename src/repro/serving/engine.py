@@ -15,10 +15,16 @@ Single-stream control loop (``CascadeServer``, paper §IV-D) per batch:
      the device) so they are never re-planned.
 
 ``MultiStreamServer`` generalizes this to N concurrent client streams
-sharing ONE uplink, with *both* planes batched:
+sharing an **edge fabric** (``repro/net``): streams are partitioned across
+cells (one serial uplink each), and escalations are placed onto a pool of
+slow-tier replicas.  The default fabric — built automatically from the
+``uplink`` argument — is the degenerate 1-cell/1-replica topology, which
+reproduces the legacy shared-uplink pipeline bit-for-bit.  Both planes
+stay batched:
 
   * data plane — one fast-tier call over every stream's frames per round,
-    one gathered slow-tier batch, one vectorized uplink transmit;
+    one gathered slow-tier batch, one fabric transmit (a vectorized
+    Lindley recursion per cell uplink and per replica queue);
   * control plane — a ``FleetRunner`` (``policy/fleet.py``) holds all
     per-stream policy state as struct-of-arrays (flat ragged backlogs,
     (S,) EWMA bandwidth vector) and plans every stream in one batched
@@ -46,6 +52,7 @@ import jax.numpy as jnp
 
 from repro.core.cascade import cascade_classify, fast_pass, slow_pass_multires
 from repro.core.netsim import Uplink, payload_sizes, png_size_model, transfer_seconds
+from repro.net import EdgeFabric
 from repro.policy import BandwidthEstimator, FleetRunner, PolicyRunner, resolve_policies
 from repro.serving.events import ArrivalSchedule, EscalationBatch, select_escalations
 from repro.serving.metrics import AggregateMetrics, ServeMetrics
@@ -173,19 +180,39 @@ class MultiStreamServer:
     """
 
     def __init__(self, cfg: ServeConfig, fast_forward: Callable, slow_forward: Callable,
-                 calibrate: Callable, uplink: Uplink, n_streams: int,
+                 calibrate: Callable, uplink: Optional[Uplink], n_streams: int,
                  scheduler: Optional[FairScheduler] = None, stagger: bool = True,
-                 policy="cbo"):
+                 policy="cbo", fabric: Optional[EdgeFabric] = None):
         if n_streams < 1:
             raise ValueError("n_streams must be >= 1")
         self.cfg = cfg
         self.fast_forward = fast_forward
         self.slow_forward = slow_forward
         self.calibrate = calibrate
-        self.uplink = uplink
+        # ``fabric`` is the network topology (cells x replicas, repro/net);
+        # when omitted, the ``uplink`` argument becomes the degenerate
+        # 1-cell/1-replica fabric — the legacy pipeline, bit-for-bit.
+        # Passing both is ambiguous (the uplink would carry no traffic but
+        # still feed the metrics), so it is rejected outright.
+        if fabric is None:
+            if uplink is None:
+                raise ValueError("pass an uplink or an EdgeFabric")
+            fabric = EdgeFabric.degenerate(uplink, n_streams)
+        else:
+            if uplink is not None:
+                raise ValueError("pass either uplink or fabric, not both "
+                                 "(the fabric's cells own all traffic)")
+            if fabric.n_streams != n_streams:
+                raise ValueError(f"fabric maps {fabric.n_streams} streams, "
+                                 f"engine has {n_streams}")
+        self.fabric = fabric
+        self.uplink = fabric.cells[0].uplink
         self.n_streams = n_streams
         self.stagger = stagger
         self.scheduler = scheduler or FairScheduler("round_robin")
+        # nominal per-stream uplink rate (each stream's own cell): the
+        # scheduler's cost normalizer and the EWMA estimators' prior
+        self._stream_bw = fabric.stream_bandwidth()
         # optimistic prior: every stream starts assuming the full link (as the
         # paper's single device does). A pessimistic 1/N prior can deadlock —
         # if B/N makes every offload look infeasible, no stream transmits, so
@@ -196,14 +223,18 @@ class MultiStreamServer:
         # ``policy``: registry name (every stream gets a fresh instance) or a
         # per-stream factory ``stream_idx -> policy | name`` for
         # heterogeneous fleets.
+        # plan against the network the fabric actually simulates: T^o is
+        # the pool's nominal service time (== cfg.server_time whenever the
+        # caller built the fabric from it), never a diverging copy
         self.fleet = FleetRunner(
             resolve_policies(policy, n_streams),
             resolutions=cfg.resolutions, acc_server=cfg.acc_server,
-            deadline=cfg.deadline, latency=uplink.latency,
-            server_time=cfg.server_time, size_of=cfg.size_of,
-            bw_init=uplink.bandwidth_bps,
+            deadline=cfg.deadline, latency=fabric.latency,
+            server_time=fabric.server_time, size_of=cfg.size_of,
+            bw_init=self._stream_bw, cell_id=fabric.cell_of,
         )
-        self.metrics = AggregateMetrics.for_streams(n_streams, uplink=uplink)
+        self.metrics = AggregateMetrics.for_streams(n_streams, uplink=self.uplink,
+                                                    fabric=fabric)
 
     def process_streams(self, frames: np.ndarray,
                         labels: Optional[np.ndarray] = None,
@@ -265,22 +296,30 @@ class MultiStreamServer:
             else:
                 slow_preds = np.zeros(0, dtype=fast_preds.dtype)
 
-            # fair uplink schedule, then one vectorized transmit for the round
+            # fair uplink schedule (cost normalized by each stream's own
+            # cell rate), then one fabric transmit for the round: per-cell
+            # uplink queues + replica placement + pool service
             order = self.scheduler.order(esc.stream, esc.t_ready,
-                                         cost=esc.payload / self.uplink.bandwidth_bps)
+                                         cost=esc.payload / self._stream_bw[esc.stream])
             q = esc.permuted(order)
             slow_q = slow_preds[order]
-            lands = self.uplink.transmit_batch(q.payload, q.t_ready)
+            lands = self.fabric.transmit(q.stream, q.payload, q.t_ready)
             ok = lands <= arr[q.stream, q.slot] + cfg.deadline
 
             final = fast_preds.copy()
             final[q.stream[ok], q.slot[ok]] = slow_q[ok]
 
-            # batched per-stream bandwidth observations (transmission order)
+            # batched per-stream bandwidth observations (transmission order):
+            # each reply's *actual* service time is subtracted (servers
+            # report their processing time, so heterogeneous replicas do
+            # not skew the estimate), but replica *queueing* is not — the
+            # device cannot separate queueing from wire time, so slow-tier
+            # contention surfaces to the EWMAs as reduced effective
+            # bandwidth and the policies back off
             self.fleet.observe_bandwidth(
                 q.stream, q.payload,
-                transfer_seconds(lands, q.t_ready, latency=self.uplink.latency,
-                                 server_time=self.uplink.server_time))
+                transfer_seconds(lands, q.t_ready, latency=self.fabric.latency,
+                                 server_time=self.fabric.last_service_time))
 
             # backlog bookkeeping, batched (same semantics as CascadeServer):
             # planned offloads left the device; non-escalated valid frames

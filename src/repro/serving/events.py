@@ -16,9 +16,12 @@ single-stream engine used:
 
   * ``EscalationBatch`` — one round's gathered low-confidence frames across
     every stream: (stream, slot, t_ready, payload, res) as flat
-    numpy arrays. The scheduler permutes it (uplink order), the uplink
-    transmits it in one ``transmit_batch`` call, and the engine scatters the
-    slow-tier answers back with boolean masks — no per-frame control flow.
+    numpy arrays. The scheduler permutes it (uplink order) and the edge
+    fabric transmits it in one call — each row is routed to its stream's
+    cell uplink and then to a slow-tier replica (``EdgeFabric.transmit``;
+    the degenerate fabric is the legacy one-``transmit_batch`` pipeline) —
+    and the engine scatters the slow-tier answers back with boolean masks,
+    no per-frame control flow.
 
 ``select_escalations`` is the vectorized gate: for each stream s it picks
 the K_s lowest-confidence frames below theta_s, using one argsort over the

@@ -78,9 +78,10 @@ class AggregateMetrics:
     ``ServeMetrics`` views lazily (tests, reports); latencies are kept as
     per-round (S, B) chunks plus validity masks until then."""
 
-    def __init__(self, n_streams: int, uplink=None):
+    def __init__(self, n_streams: int, uplink=None, fabric=None):
         self.n_streams = int(n_streams)
         self.uplink = uplink  # the shared Uplink (for contention counters)
+        self.fabric = fabric  # EdgeFabric (per-cell / per-replica counters)
         self.wall_time: float = 0.0  # simulated horizon (last arrival + deadline)
         self._frames = np.zeros(n_streams, dtype=np.int64)
         self._offloaded = np.zeros(n_streams, dtype=np.int64)
@@ -90,8 +91,8 @@ class AggregateMetrics:
         self._cache: list | None = None
 
     @classmethod
-    def for_streams(cls, n_streams: int, uplink=None) -> "AggregateMetrics":
-        return cls(n_streams, uplink=uplink)
+    def for_streams(cls, n_streams: int, uplink=None, fabric=None) -> "AggregateMetrics":
+        return cls(n_streams, uplink=uplink, fabric=fabric)
 
     def update_round(self, n_frames, n_offloaded, n_missed, n_correct,
                      latencies, valid) -> None:
@@ -171,9 +172,38 @@ class AggregateMetrics:
             "stream_acc_max": round(float(max(acc)), 4),
             "offload_fairness": round(self.offload_fairness, 4),
         }
-        if self.uplink is not None:
+        fs = self.fabric.summary() if self.fabric is not None else None
+        multi_cell = self.fabric is not None and self.fabric.n_cells > 1
+        if multi_cell:
+            # the uplink_* keys stay fabric-wide under a multi-cell fabric:
+            # totals over every cell, utilization averaged per cell (1.0 =
+            # every radio saturated) — never just cell 0's counters
+            out["uplink_queued_s"] = round(sum(fs["cell_queued_s"]), 4)
+            out["uplink_busy_s"] = round(sum(fs["cell_busy_s"]), 4)
+            if self.wall_time > 0:
+                out["uplink_utilization"] = round(
+                    sum(fs["cell_busy_s"]) / (self.fabric.n_cells * self.wall_time), 4)
+        elif self.uplink is not None:
             out["uplink_queued_s"] = round(float(self.uplink.queued_seconds), 4)
             out["uplink_busy_s"] = round(float(self.uplink.busy_seconds), 4)
             if self.wall_time > 0:
                 out["uplink_utilization"] = round(self.uplink.utilization(self.wall_time), 4)
+        if self.fabric is not None and (self.fabric.n_cells > 1
+                                        or self.fabric.n_replicas > 1):
+            # topology contention: where escalations queued — on the radio
+            # (cell uplinks) or at the slow tier (replica pool)
+            out["cells"] = fs["cells"]
+            out["replicas"] = fs["replicas"]
+            out["placement"] = fs["placement"]
+            out["cell_queued_s"] = [round(x, 4) for x in fs["cell_queued_s"]]
+            out["cell_busy_s"] = [round(x, 4) for x in fs["cell_busy_s"]]
+            out["replica_queued_s"] = [round(x, 4) for x in fs["replica_queued_s"]]
+            out["replica_busy_s"] = [round(x, 4) for x in fs["replica_busy_s"]]
+            # utilization only means "overload when > 1" for serial queues;
+            # an infinite-capacity (serial=False) pool never queues, so the
+            # ratio would misread as saturation
+            if self.wall_time > 0 and self.fabric.pool.serial:
+                out["replica_utilization"] = [
+                    round(float(x), 4)
+                    for x in self.fabric.pool.utilization(self.wall_time)]
         return out

@@ -22,6 +22,13 @@ Policies (the ``policy`` knob, see docs/serving.md):
 
 Everything is vectorized: per-stream tag recurrences are the same max-plus
 (Lindley) form the uplink uses, computed with cumsum + running max.
+
+Under a multi-cell edge fabric the one global ordering still works: only
+*within-cell* relative order matters (each cell's uplink serializes just
+its own rows, in the order given), and restricting an SFQ-sorted sequence
+to one cell's rows preserves their tag order.  The engine normalizes
+``cost`` by each stream's own cell rate (``payload / cell_bandwidth``), so
+tags stay comparable across heterogeneous cells.
 """
 from __future__ import annotations
 

@@ -1,0 +1,352 @@
+"""Edge fabric: replica pool semantics, placement, traces, degenerate anchor."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.netsim import Uplink, mbps, png_size_model
+from repro.net import (
+    BandwidthTrace,
+    EdgeFabric,
+    Placement,
+    ReplicaPool,
+    assign_looped,
+    lte_trace,
+    regime_shift_trace,
+    wifi_trace,
+)
+from repro.policy import BandwidthEstimator
+from repro.serving import MultiStreamServer, ServeConfig
+from repro.serving.synthetic import synthetic_streams, synthetic_tiers
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+
+
+# ------------------------------ ReplicaPool ------------------------------- #
+
+
+def test_replica_pool_k1_delay_matches_raw_uplink_server_time():
+    """Fuzz: a K=1 infinite-capacity pool is exactly the legacy
+    ``+ server_time`` tail of ``Uplink.transmit_batch``."""
+    rng = np.random.default_rng(0)
+    for trial in range(20):
+        st = float(rng.uniform(0.005, 0.08))
+        up = Uplink(bandwidth_bps=mbps(rng.uniform(0.5, 20)), latency=0.05, server_time=st)
+        pool = ReplicaPool(1, st, serial=False)
+        payloads = rng.uniform(100, 50_000, 40)
+        subs = np.sort(rng.uniform(0, 5, 40))
+        end_tx = up.upload_batch(payloads, subs)
+        done = pool.process(end_tx, np.zeros(40, dtype=np.int64))
+        assert np.array_equal(done + up.latency, end_tx + st + up.latency)
+        assert pool.n_jobs.tolist() == [40]
+        assert pool.queued_seconds[0] == 0.0
+
+
+def test_replica_pool_k1_serial_matches_scalar_recursion():
+    """Fuzz: one serial replica == the scalar Lindley loop, including
+    busy-state carried across batches."""
+    rng = np.random.default_rng(1)
+    for trial in range(10):
+        st = float(rng.uniform(0.01, 0.1))
+        pool = ReplicaPool(1, st)
+        busy = 0.0
+        for _ in range(3):  # several batches: state must persist
+            arr = np.sort(rng.uniform(0, 4, 25))
+            got = pool.process(arr, np.zeros(25, dtype=np.int64))
+            want = np.empty(25)
+            for i, a in enumerate(arr):
+                busy = max(a, busy) + st
+                want[i] = busy
+            np.testing.assert_allclose(got, want, rtol=0, atol=1e-9)
+            assert pool.busy_until[0] == pytest.approx(busy)
+
+
+def test_replica_pool_multi_replica_isolation():
+    """Jobs on one replica never delay another replica's jobs."""
+    pool = ReplicaPool(2, 1.0)
+    done = pool.process(np.zeros(4), np.array([0, 0, 1, 1]))
+    np.testing.assert_allclose(done, [1.0, 2.0, 1.0, 2.0])
+    assert pool.queued_seconds.tolist() == [1.0, 1.0]
+    assert pool.busy_seconds.tolist() == [2.0, 2.0]
+
+
+def test_replica_pool_heterogeneous_service_times():
+    pool = ReplicaPool(2, [0.5, 2.0])
+    done = pool.process(np.zeros(2), np.array([0, 1]))
+    np.testing.assert_allclose(done, [0.5, 2.0])
+    assert pool.nominal_server_time == pytest.approx(1.25)
+
+
+def test_replica_pool_ties_keep_batch_order():
+    """Simultaneous arrivals at one replica serve in batch order."""
+    pool = ReplicaPool(1, 0.1)
+    done = pool.process(np.zeros(3), np.zeros(3, dtype=np.int64))
+    np.testing.assert_allclose(done, [0.1, 0.2, 0.3])
+
+
+def test_replica_pool_rejects_bad_args():
+    with pytest.raises(ValueError):
+        ReplicaPool(0, 0.1)
+    pool = ReplicaPool(2, 0.1)
+    with pytest.raises(ValueError):
+        pool.process(np.zeros(2), np.array([0, 2]))  # replica id out of range
+    with pytest.raises(ValueError):
+        pool.process(np.zeros(2), np.zeros(3, dtype=np.int64))  # shape mismatch
+
+
+# ------------------------------ Placement --------------------------------- #
+
+
+@pytest.mark.parametrize("policy", ["round_robin", "jsq", "least_land"])
+def test_placement_matches_looped_reference(policy):
+    """Fuzz: batched assignment == the per-row reference, homogeneous and
+    heterogeneous replicas, warm queue state, unsorted arrivals."""
+    rng = np.random.default_rng(2)
+    for trial in range(15):
+        K = int(rng.integers(1, 6))
+        st = rng.uniform(0.01, 0.2, K)
+        pool = ReplicaPool(K, st)
+        pool.busy_until[:] = rng.uniform(0, 0.5, K)
+        arrive = rng.uniform(0, 2, int(rng.integers(0, 30)))
+        pl = Placement(policy)
+        got = pl.assign(pool, arrive)
+        want = assign_looped(policy, pool, arrive)
+        assert np.array_equal(got, want), (policy, trial)
+
+
+def test_jsq_matches_brute_force_simulation():
+    """JSQ-picked schedules match an explicit brute-force queue simulation:
+    every request joins the replica with the least pending work, and the
+    completion times follow."""
+    rng = np.random.default_rng(3)
+    K = 3
+    pool = ReplicaPool(K, 0.05)
+    arrive = np.sort(rng.uniform(0, 0.4, 24))
+    rep = Placement("jsq").assign(pool, arrive)
+    done = pool.process(arrive, rep)
+    # brute force: simulate the queues by hand
+    busy = np.zeros(K)
+    for i, a in enumerate(arrive):
+        k = int(np.argmin(busy))
+        assert rep[i] == k
+        busy[k] = max(a, busy[k]) + 0.05
+        assert done[i] == pytest.approx(busy[k])
+
+
+def test_round_robin_cursor_carries_across_rounds():
+    pool = ReplicaPool(3, 0.05)
+    pl = Placement("round_robin")
+    a = pl.assign(pool, np.zeros(2))
+    b = pl.assign(pool, np.zeros(2))
+    assert np.concatenate([a, b]).tolist() == [0, 1, 2, 0]
+
+
+def test_least_land_prefers_fast_replica_under_heterogeneity():
+    """A short queue on a slow replica loses to a longer queue on a fast
+    one — the case separating least_land from JSQ."""
+    pool = ReplicaPool(2, [0.01, 1.0])
+    pool.busy_until[:] = [0.05, 0.0]  # replica 1 idle but 100x slower
+    jsq = Placement("jsq").assign(pool, np.zeros(1))
+    ll = Placement("least_land").assign(pool, np.zeros(1))
+    assert jsq[0] == 1  # shortest queue
+    assert ll[0] == 0  # earliest completion
+
+
+def test_placement_rejects_unknown_policy():
+    with pytest.raises(ValueError):
+        Placement("random")
+
+
+# ------------------------------ traces ------------------------------------ #
+
+
+def test_bandwidth_trace_lookup_and_loop():
+    tr = BandwidthTrace(t=np.array([0.0, 10.0]), bps=np.array([100.0, 50.0]),
+                        loop=True, duration=20.0)
+    np.testing.assert_allclose(tr.bandwidth_at([0, 9.9, 10, 19.9, 20, 25]),
+                               [100, 100, 50, 50, 100, 100])  # 20/25 wrap to 0/5
+    hold = BandwidthTrace(t=np.array([0.0, 10.0]), bps=np.array([100.0, 50.0]))
+    np.testing.assert_allclose(hold.bandwidth_at([15, 1e6]), [50, 50])  # holds last
+    assert tr.mean_bps == pytest.approx(75.0)
+
+
+def test_bandwidth_trace_validation():
+    with pytest.raises(ValueError):
+        BandwidthTrace(t=np.array([1.0, 2.0]), bps=np.array([1.0, 1.0]))  # t[0] != 0
+    with pytest.raises(ValueError):
+        BandwidthTrace(t=np.array([0.0, 0.0]), bps=np.array([1.0, 1.0]))  # not ascending
+    with pytest.raises(ValueError):
+        BandwidthTrace(t=np.array([0.0]), bps=np.array([-1.0]))  # negative rate
+
+
+def test_trace_generators_deterministic():
+    for gen in (lte_trace, wifi_trace):
+        a, b = gen(30.0, seed=5), gen(30.0, seed=5)
+        np.testing.assert_array_equal(a.bps, b.bps)
+        assert not np.array_equal(a.bps, gen(30.0, seed=6).bps)
+        assert (a.bps > 0).all()
+
+
+def test_uplink_trace_batch_matches_sequential():
+    """Trace-driven transmit_batch (fixed-point Lindley) == serial loop."""
+    tr = regime_shift_trace((20.0, 1.0), period=3.0)
+    rng = np.random.default_rng(4)
+    payloads = rng.uniform(1_000, 80_000, 40)
+    subs = np.sort(rng.uniform(0, 12, 40))
+    seq_up = Uplink(bandwidth_bps=mbps(5), latency=0.05, server_time=0.02, trace=tr)
+    bat_up = Uplink(bandwidth_bps=mbps(5), latency=0.05, server_time=0.02, trace=tr)
+    seq = np.array([seq_up.transmit(float(p), float(t)) for p, t in zip(payloads, subs)])
+    bat = bat_up.transmit_batch(payloads, subs)
+    np.testing.assert_allclose(bat, seq, rtol=0, atol=1e-9)
+    assert bat_up._busy_until == pytest.approx(seq_up._busy_until)
+
+
+def test_ewma_tracks_regime_shift():
+    """The EWMA bandwidth estimator must re-lock onto the new rate after a
+    regime shift in the trace (the ROADMAP's tracking stress)."""
+    hi, lo = mbps(20.0), mbps(2.0)
+    tr = regime_shift_trace((20.0, 2.0), period=30.0, loop=False)
+    up = Uplink(bandwidth_bps=hi, latency=0.0, server_time=0.0, trace=tr)
+    est = BandwidthEstimator(alpha=0.3, estimate_bps=hi)
+    payload = 20_000.0
+    t, in_hi, in_lo = 0.0, [], []
+    for _ in range(200):
+        land = up.transmit(payload, t)
+        est.observe(payload, land - t)
+        (in_hi if t < 30.0 else in_lo).append(est.estimate_bps)
+        t = max(t + 0.25, up._busy_until)
+    # locked to the high regime before the shift...
+    assert in_hi[-1] == pytest.approx(hi, rel=0.05)
+    # ...and re-locked to the low regime within the second phase
+    assert in_lo[-1] == pytest.approx(lo, rel=0.05)
+    # convergence is monotone-ish: estimate falls by >5x across the shift
+    assert in_lo[-1] < in_hi[-1] / 5
+
+
+# ------------------------------ fabric ------------------------------------ #
+
+
+def _cfg():
+    return ServeConfig(resolutions=(4, 8), acc_server=(0.7, 0.99), batch_size=16,
+                       frame_rate=30.0, deadline=0.2)
+
+
+def test_degenerate_fabric_reproduces_multistream_snapshot():
+    """1 cell, 1 replica, constant bandwidth: the fabric path must pin the
+    recorded pre-fabric lockstep metrics bit-for-bit."""
+    with open(os.path.join(DATA, "multistream_snapshot.json")) as f:
+        snapshot = json.load(f)
+    fast, slow, cal = synthetic_tiers()
+    cfg = _cfg()
+    imgs, labels = synthetic_streams(4, 64)
+    up = Uplink(bandwidth_bps=mbps(50.0), latency=0.05, server_time=cfg.server_time)
+    fab = EdgeFabric.degenerate(up, n_streams=4)
+    agg = MultiStreamServer(cfg, fast, slow, cal, None, n_streams=4,
+                            fabric=fab).process_streams(imgs, labels)
+    for m, ref in zip(agg.per_stream, snapshot["per_stream"]):
+        assert m.accuracy == ref["accuracy"]
+        assert m.offload_frac == ref["offload_frac"]
+        assert m.deadline_miss_frac == ref["deadline_miss_frac"]
+        assert m.n_frames == ref["n_frames"]
+    assert agg.n_offloaded == snapshot["n_offloaded"]
+
+
+def test_fabric_transmit_equals_legacy_transmit_batch():
+    """Degenerate ``EdgeFabric.transmit`` is float-identical to
+    ``Uplink.transmit_batch`` on the same workload."""
+    rng = np.random.default_rng(6)
+    legacy = Uplink(bandwidth_bps=mbps(2.0), latency=0.05, server_time=0.037)
+    mirror = Uplink(bandwidth_bps=mbps(2.0), latency=0.05, server_time=0.037)
+    fab = EdgeFabric.degenerate(mirror, n_streams=8)
+    payloads = rng.uniform(100, 50_000, 60)
+    subs = np.sort(rng.uniform(0, 5, 60))
+    stream = rng.integers(0, 8, 60)
+    a = legacy.transmit_batch(payloads, subs)
+    b = fab.transmit(stream, payloads, subs)
+    assert np.array_equal(a, b)
+    assert legacy._busy_until == mirror._busy_until
+
+
+def test_fabric_partitions_streams_across_cells():
+    """Each cell's uplink carries exactly its own streams' transfers, and
+    one cell's burst cannot queue another cell's traffic."""
+    ups = [Uplink(bandwidth_bps=1000.0, latency=0.0, server_time=0.0) for _ in range(2)]
+    pool = ReplicaPool(1, 0.0, serial=False)
+    fab = EdgeFabric(ups, pool, cell_of=np.array([0, 0, 1, 1]))
+    # streams 0/1 (cell 0) dump a burst; stream 2 (cell 1) sends one frame
+    lands = fab.transmit(np.array([0, 1, 2]), np.array([500.0, 500.0, 500.0]),
+                         np.zeros(3))
+    np.testing.assert_allclose(lands, [0.5, 1.0, 0.5])  # cell 1 unaffected
+    assert ups[0].n_transfers == 2 and ups[1].n_transfers == 1
+    assert ups[0].queued_seconds == pytest.approx(0.5)
+    assert ups[1].queued_seconds == 0.0
+
+
+def test_fabric_replica_sharding_relieves_server_contention():
+    """Same workload, more replicas => no later completions, and K=2 splits
+    a saturated K=1 queue."""
+    arrive = np.zeros(8)
+    ups = [Uplink(bandwidth_bps=1e9, latency=0.0, server_time=0.1)]
+    one = EdgeFabric([Uplink(bandwidth_bps=1e9, latency=0.0, server_time=0.1)],
+                     ReplicaPool(1, 0.1), n_streams=4)
+    two = EdgeFabric(ups, ReplicaPool(2, 0.1), n_streams=4)
+    s = np.zeros(8, dtype=np.int64)
+    p = np.full(8, 1.0)
+    l1 = one.transmit(s, p, arrive)
+    l2 = two.transmit(s, p, arrive)
+    assert (l2 <= l1 + 1e-12).all()
+    assert l1.max() == pytest.approx(0.8, abs=1e-6)  # 8 jobs serialized
+    assert l2.max() == pytest.approx(0.4, abs=1e-6)  # split across 2 replicas
+
+
+def test_fabric_validation():
+    up = Uplink(bandwidth_bps=1e6, latency=0.05, server_time=0.01)
+    pool = ReplicaPool(1, 0.01)
+    with pytest.raises(ValueError):
+        EdgeFabric([], pool, n_streams=4)
+    with pytest.raises(ValueError):
+        EdgeFabric(up, pool)  # neither cell_of nor n_streams
+    with pytest.raises(ValueError):
+        EdgeFabric(up, pool, cell_of=np.array([0, 1]))  # cell id out of range
+    with pytest.raises(ValueError):  # latency mismatch across cells
+        EdgeFabric([up, Uplink(bandwidth_bps=1e6, latency=0.1, server_time=0.01)],
+                   pool, n_streams=2)
+
+
+def test_multistream_engine_rejects_mismatched_fabric():
+    fast, slow, cal = synthetic_tiers()
+    cfg = _cfg()
+    up = Uplink(bandwidth_bps=mbps(50.0), latency=0.05, server_time=cfg.server_time)
+    fab = EdgeFabric.degenerate(up, n_streams=2)
+    with pytest.raises(ValueError):
+        MultiStreamServer(cfg, fast, slow, cal, None, n_streams=4, fabric=fab)
+    with pytest.raises(ValueError):
+        MultiStreamServer(cfg, fast, slow, cal, None, n_streams=4)  # no uplink either
+    with pytest.raises(ValueError):  # both is ambiguous: whose counters?
+        other = Uplink(bandwidth_bps=mbps(50.0), latency=0.05, server_time=cfg.server_time)
+        fab2 = EdgeFabric.degenerate(up, n_streams=4)
+        MultiStreamServer(cfg, fast, slow, cal, other, n_streams=4, fabric=fab2)
+
+
+def test_multicell_engine_runs_and_splits_load():
+    """S=8 across 2 cells + 2 serial replicas: the engine round loop routes
+    per-cell batches and the counters land on both cells."""
+    fast, slow, cal = synthetic_tiers()
+    cfg = ServeConfig(resolutions=(4, 8), acc_server=(0.7, 0.99), batch_size=16,
+                      frame_rate=30.0, deadline=0.2,
+                      size_of=lambda r: png_size_model(r, base_res=16))
+    imgs, labels = synthetic_streams(8, 64)
+    fab = EdgeFabric.build(n_streams=8, n_cells=2, n_replicas=2,
+                           bandwidth_bps=mbps(2.0), latency=0.05,
+                           server_time=cfg.server_time, placement="jsq")
+    srv = MultiStreamServer(cfg, fast, slow, cal, None, n_streams=8, fabric=fab)
+    agg = srv.process_streams(imgs, labels)
+    assert agg.n_frames == 8 * 64
+    n_escalated = agg.n_offloaded + agg.n_deadline_miss
+    assert fab.n_transfers == n_escalated > 0
+    cells = fab.summary()["cell_transfers"]
+    assert len(cells) == 2 and all(c > 0 for c in cells)
+    assert int(fab.pool.n_jobs.sum()) == n_escalated
+    s = agg.summary()
+    assert s["cells"] == 2 and s["replicas"] == 2 and s["placement"] == "jsq"

@@ -86,3 +86,74 @@ def test_transmit_batch_empty_and_stats():
 def test_png_size_model_vectorized():
     res = np.array([112, 224])
     np.testing.assert_allclose(png_size_model(res), [15_000.0, 60_000.0])
+
+
+def test_would_land_at_pins_next_transmit_exactly():
+    """Regression (jittered-bandwidth consistency): ``would_land_at`` must
+    predict the *next* ``transmit``'s land time exactly — including when the
+    start is clamped by a busy wire into a different jitter second, where
+    sampling bandwidth at the unclamped submit time would diverge."""
+    from repro.net import regime_shift_trace
+
+    for kw in ({"jitter": 0.5, "seed": 11},
+               {"trace": regime_shift_trace((20.0, 1.0), period=2.0)}):
+        up = Uplink(bandwidth_bps=mbps(1.0), latency=0.05, server_time=0.01, **kw)
+        # park the wire busy until t=3.7: submits at t<3.7 start mid-second 3
+        up.transmit(mbps(1.0) * 3.7, 0.0)
+        for t_submit in (0.2, 2.9, 3.69, 5.0):
+            predicted = up.would_land_at(40_000.0, t_submit)
+            assert up.transmit(40_000.0, t_submit) == predicted
+
+
+def test_jitter_factors_cached_and_stable():
+    """The per-second factor cache covers exactly the seconds touched and
+    growing it never changes previously observed values (seed-per-second
+    semantics) — including far-future instants, which must cost one cache
+    entry rather than a dense 0..t table."""
+    up = Uplink(bandwidth_bps=1000.0, latency=0.0, server_time=0.0, jitter=0.4, seed=9)
+    early = up.bandwidth_at(np.arange(5, dtype=np.float64)).copy()
+    far = up.current_bandwidth(1e9)  # must be instant, not a 10^9-entry table
+    np.testing.assert_array_equal(up.bandwidth_at(np.arange(5, dtype=np.float64)), early)
+    assert len(up._jit_keys) == 6  # seconds 0..4 plus 1e9, nothing else
+    assert up.current_bandwidth(1e9) == far
+    # and the scalar path reads the same cache
+    assert up.current_bandwidth(3.0) == early[3]
+
+
+def test_jitter_seeds_are_independent_channels():
+    """Different seeds must give independent factor sequences — with the
+    old additive ``seed + second`` seeding, seed c was just seed 0 shifted
+    by c seconds, so multi-cell jitter sweeps measured copies of one
+    channel."""
+    a = Uplink(bandwidth_bps=1000.0, latency=0.0, server_time=0.0, jitter=0.4, seed=0)
+    b = Uplink(bandwidth_bps=1000.0, latency=0.0, server_time=0.0, jitter=0.4, seed=1)
+    shifted = a.bandwidth_at(np.arange(1, 21, dtype=np.float64))
+    other = b.bandwidth_at(np.arange(0, 20, dtype=np.float64))
+    assert not np.allclose(shifted, other)
+
+
+def test_jittered_batch_bunched_submits_match_sequential():
+    """Heavy bunching (all submits inside one second, queue draining across
+    many seconds) — the fixed-point iteration must still equal the serial
+    recursion."""
+    payloads = np.full(60, 30_000.0)
+    subs = np.zeros(60)
+    up_seq = Uplink(bandwidth_bps=mbps(0.4), latency=0.0, server_time=0.0,
+                    jitter=0.3, seed=21)
+    up_bat = Uplink(bandwidth_bps=mbps(0.4), latency=0.0, server_time=0.0,
+                    jitter=0.3, seed=21)
+    seq = np.array([up_seq.transmit(float(p), float(t)) for p, t in zip(payloads, subs)])
+    bat = up_bat.transmit_batch(payloads, subs)
+    np.testing.assert_allclose(bat, seq, rtol=0, atol=1e-9)
+    assert up_bat.queued_seconds == pytest.approx(up_seq.queued_seconds)
+    assert up_bat.busy_seconds == pytest.approx(up_seq.busy_seconds)
+
+
+def test_trace_overrides_base_bandwidth():
+    from repro.net import BandwidthTrace
+
+    tr = BandwidthTrace(t=np.array([0.0, 1.0]), bps=np.array([500.0, 2000.0]))
+    up = Uplink(bandwidth_bps=999.0, latency=0.0, server_time=0.0, trace=tr)
+    assert up.current_bandwidth(0.5) == 500.0
+    assert up.current_bandwidth(1.5) == 2000.0
+    assert up.transmit(500.0, 0.0) == pytest.approx(1.0)  # 500 B at 500 B/s
