@@ -170,6 +170,8 @@ def run(args=None) -> dict:
 
     with open(out_path("fabric_sweep.json"), "w") as f:
         json.dump(out, f, indent=2)
+    with open(out_path("BENCH_fabric.json"), "w") as f:  # machine-readable CI name
+        json.dump(out, f, indent=2)
     return out
 
 

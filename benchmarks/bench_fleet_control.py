@@ -15,6 +15,18 @@ element traffic, so narrow containers land lower than wide hosts).
 
   PYTHONPATH=src:benchmarks python benchmarks/bench_fleet_control.py
   PYTHONPATH=src:benchmarks python benchmarks/bench_fleet_control.py --smoke
+
+``--backend jax`` benchmarks the compiled round loop instead
+(``serving/engine_jax.py``): after an exact-integer parity gate at small S
+(both ``MultiStreamServer`` backends replay the same workload and must
+agree on every offload/schedule/miss count), it scans synthetic
+``RoundInputs`` through the jitted ``lax.scan`` engine at fleet sizes up
+to S=100000 (max_backlog=8 — the CPU-feasible regime the paper's fleets
+run in) and reports rounds/sec and frames/sec, compile time excluded.
+Results land in ``results/bench/BENCH_fleet.json``.
+
+  PYTHONPATH=src:benchmarks python benchmarks/bench_fleet_control.py --backend jax
+  PYTHONPATH=src:benchmarks python benchmarks/bench_fleet_control.py --smoke --backend jax
 """
 from __future__ import annotations
 
@@ -30,6 +42,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 FLEET_SIZES = (16, 64, 256, 1024)
+JAX_FLEET_SIZES = (1000, 10000, 100000)
 
 
 def build_fleet(policy: str, S: int, seed: int, backlog: int = 16):
@@ -94,9 +107,126 @@ def bench_one(policy: str, S: int, seed: int, repeats: int, backlog: int = 16) -
             "speedup": round(tl / max(tb, 1e-12), 2)}
 
 
+def check_jax_parity(S: int = 4, n_frames: int = 64, seed: int = 0) -> dict:
+    """Exact-integer gate: both ``MultiStreamServer`` backends replay the
+    same seeded workload and must agree on every aggregate decision count
+    (frame_rate=32 — the tie-free grid, see tests/_diff.py)."""
+    from repro.core.netsim import Uplink, mbps
+    from repro.net import EdgeFabric
+    from repro.serving import MultiStreamServer, ServeConfig
+    from repro.serving.synthetic import synthetic_streams, synthetic_tiers
+
+    fast, slow, cal = synthetic_tiers()
+    cfg = ServeConfig(resolutions=(4, 8), acc_server=(0.7, 0.99), batch_size=16,
+                      frame_rate=32.0, deadline=0.2)
+    imgs, labels = synthetic_streams(S, n_frames, seed=seed)
+    mets = {}
+    for backend in ("numpy", "jax"):
+        fab = EdgeFabric.degenerate(
+            Uplink(bandwidth_bps=mbps(50.0), latency=0.05,
+                   server_time=cfg.server_time), n_streams=S)
+        mets[backend] = MultiStreamServer(
+            cfg, fast, slow, cal, None, n_streams=S, fabric=fab,
+            backend=backend).process_streams(imgs, labels)
+    mn, mj = mets["numpy"], mets["jax"]
+    for k in ("n_frames", "n_offloaded", "n_deadline_miss"):
+        assert getattr(mn, k) == getattr(mj, k), (k, getattr(mn, k), getattr(mj, k))
+    assert mn.accuracy == mj.accuracy, (mn.accuracy, mj.accuracy)
+    return {"parity": "exact", "n_streams": S, "n_frames": int(mn.n_frames),
+            "n_offloaded": int(mn.n_offloaded)}
+
+
+def bench_jax_one(S: int, n_rounds: int, seed: int, backlog: int = 8,
+                  batch: int = 8) -> dict:
+    """Round-loop throughput of the jitted engine on synthetic inputs.
+
+    ``collect="none"`` so the scan carries nothing per round beyond the
+    fleet state — the S=1e5 regime the numpy loop cannot reach."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.netsim import mbps, payload_sizes, png_size_model
+    from repro.policy.fleet_jax import spec_for_policy
+    from repro.policy.registry import make_policy
+    from repro.serving import engine_jax as ej
+
+    resolutions = (4, 8)
+    sizes = payload_sizes(png_size_model, np.asarray(resolutions))
+    pspec = spec_for_policy(make_policy("cbo", max_backlog=backlog),
+                            sizes=sizes, acc_server=(0.7, 0.99), deadline=0.2,
+                            latency=0.05, server_time=0.037)
+    spec = ej.EngineSpec(n_streams=S, batch=batch, n_cells=1, n_replicas=1,
+                         planner=pspec, collect="none")
+    bw = mbps(6.0)
+    params = ej.EngineParams(
+        sizes=jnp.asarray(sizes, dtype=jnp.float32),
+        cell_bw=jnp.asarray([bw], dtype=jnp.float32),
+        cell_of=jnp.zeros(S, dtype=jnp.int32),
+        replica_st=jnp.asarray([0.037], dtype=jnp.float32),
+        stream_bw=jnp.full((S,), bw, dtype=jnp.float32),
+        weights=jnp.ones(S, dtype=jnp.float32),
+        bw_init=jnp.full((S,), bw, dtype=jnp.float32))
+    rng = np.random.default_rng(seed)
+    fr = 32.0
+    base = (np.arange(n_rounds * batch, dtype=np.float32) / fr).reshape(
+        n_rounds, 1, batch)
+    m = len(resolutions)
+    inputs = ej.RoundInputs(
+        arr=jnp.asarray(np.broadcast_to(base, (n_rounds, S, batch))),
+        valid=jnp.ones((n_rounds, S, batch), dtype=bool),
+        conf=jnp.asarray(rng.uniform(0.0, 1.0, (n_rounds, S, batch)),
+                         dtype=jnp.float32),
+        fast_ok=jnp.asarray(rng.random((n_rounds, S, batch)) < 0.7),
+        slow_ok=jnp.asarray(rng.random((n_rounds, S, batch, m)) < 0.9))
+
+    step = ej.make_engine(spec)
+    carry0 = ej.init_carry(spec, params)
+    t0 = time.perf_counter()
+    carry, _ = step(params, carry0, inputs)
+    jax.block_until_ready(carry)
+    t_first = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    carry, _ = step(params, carry0, inputs)
+    jax.block_until_ready(carry)
+    t_steady = time.perf_counter() - t0
+    return {"backend": "jax", "n_streams": S, "rounds": n_rounds,
+            "batch": batch, "backlog": backlog,
+            "compile_s": round(max(t_first - t_steady, 0.0), 3),
+            "steady_s": round(t_steady, 4),
+            "rounds_per_s": round(n_rounds / max(t_steady, 1e-12), 2),
+            "frames_per_s": round(n_rounds * S * batch / max(t_steady, 1e-12), 1)}
+
+
+def run_jax(args) -> dict:
+    gate = check_jax_parity(seed=args.seed)
+    print("bench_fleet_control,backend=jax," +
+          ",".join(f"{k}={v}" for k, v in gate.items()), flush=True)
+    sizes = (256,) if args.smoke else args.sizes
+    if sizes == FLEET_SIZES:  # backend-appropriate default scale
+        sizes = JAX_FLEET_SIZES
+    n_rounds = 4 if args.smoke else args.rounds
+    rows = []
+    for S in sizes:
+        row = bench_jax_one(S, n_rounds, seed=args.seed)
+        rows.append(row)
+        print("bench_fleet_control," + ",".join(f"{k}={v}" for k, v in row.items()),
+              flush=True)
+    out = {"backend": "jax", "parity_gate": gate, "rows": rows,
+           "smoke": bool(args.smoke)}
+    from benchmarks.common import out_path
+
+    with open(out_path("BENCH_fleet.json"), "w") as f:
+        json.dump(out, f, indent=2)
+    if args.smoke:
+        print("bench_fleet_control,smoke=ok  (jax decisions == numpy decisions)")
+    return out
+
+
 def run(args=None) -> dict:
     if args is None:
         args = parse_args([])
+    if args.backend == "jax":
+        return run_jax(args)
     sizes = (64,) if args.smoke else args.sizes
     repeats = 1 if args.smoke else args.repeats
     rows = []
@@ -112,10 +242,12 @@ def run(args=None) -> dict:
     ref = [r for r in rows if r["policy"] == "cbo" and r["n_streams"] == 256]
     if ref and ref[0]["speedup"] < 10.0:
         print(f"bench_fleet_control,WARNING: cbo S=256 speedup {ref[0]['speedup']} < 10x")
-    out = {"rows": rows}
+    out = {"backend": "numpy", "rows": rows}
     from benchmarks.common import out_path
 
     with open(out_path("fleet_control.json"), "w") as f:
+        json.dump(out, f, indent=2)
+    with open(out_path("BENCH_fleet.json"), "w") as f:
         json.dump(out, f, indent=2)
     return out
 
@@ -128,8 +260,12 @@ def parse_args(argv=None):
                     default=("cbo", "threshold"), help="policies to bench")
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy",
+                    help="numpy: batched-vs-looped planner; jax: compiled round loop")
+    ap.add_argument("--rounds", type=int, default=16,
+                    help="rounds per lax.scan run (--backend jax)")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI mode: S=64, single pass, assert batched == looped")
+                    help="CI mode: small S, single pass, exact parity gates")
     return ap.parse_args(argv)
 
 

@@ -265,7 +265,7 @@ class FleetRunner:
     def __init__(self, policies: Sequence, *, resolutions: tuple, acc_server: tuple,
                  deadline: float, latency: float, server_time: float, size_of,
                  bw_init: float | np.ndarray = 1e6, bw_alpha: float = 0.3,
-                 cell_id: np.ndarray | None = None):
+                 cell_id: np.ndarray | None = None, backend: str = "numpy"):
         from repro.core.netsim import payload_sizes
 
         self.policies = list(policies)
@@ -291,6 +291,21 @@ class FleetRunner:
             groups.setdefault(_group_key(p), []).append(s)
         self.groups = [(self.policies[ss[0]], np.asarray(ss, dtype=np.int64))
                        for ss in groups.values()]
+        if backend not in ("numpy", "jax"):
+            raise ValueError(f"backend must be 'numpy' or 'jax', got {backend!r}")
+        self.backend = backend
+        self._jax_planner = None
+        if backend == "jax":
+            from repro.policy.fleet_jax import make_planner, spec_for_policy
+
+            if len(self.groups) != 1:
+                raise ValueError("backend='jax' needs a homogeneous fleet "
+                                 f"(one policy group); got {len(self.groups)}")
+            spec = spec_for_policy(
+                self.groups[0][0], sizes=self.sizes, acc_server=self.acc_server,
+                deadline=self.deadline, latency=self.latency,
+                server_time=self.server_time)
+            self._jax_planner = (spec, make_planner(spec))
 
     # -- env ------------------------------------------------------------- #
 
@@ -313,6 +328,8 @@ class FleetRunner:
         now = np.asarray(now, dtype=np.float64)
         active = np.ones(S, dtype=bool) if active is None else np.asarray(active, dtype=bool)
         self.state.prune_expired(now, self.deadline, active & self._prune)
+        if self.backend == "jax":
+            return self._plan_all_jax(now, active)
         env = self.env_batch()
         batch = PlanBatch.empty(S, len(self.acc_server))
         batch.n_frames = self.state.lengths.copy()
@@ -329,6 +346,36 @@ class FleetRunner:
                 pb = plan_many(now[sel], sub_state, sub_env)
             batch.scatter(sel, pb)
         batch.sort_offloads()
+        batch.planned = active.copy()
+        return batch
+
+    def _plan_all_jax(self, now: np.ndarray, active: np.ndarray) -> PlanBatch:
+        """Compiled planning pass: pad the (already pruned) ragged state to
+        fixed shapes, run the jitted planner, bridge back to ``PlanBatch``.
+        Decisions are pinned integer-exact to the numpy path by
+        ``tests/test_fleet_jax.py``."""
+        import jax.numpy as jnp
+
+        from repro.policy.fleet_jax import fleet_from_state, plan_batch_from_out
+
+        spec, planner = self._jax_planner
+        fleet = fleet_from_state(self.state, spec.L, dtype=spec.dtype)
+        out = planner(fleet,
+                      jnp.asarray(np.where(np.isfinite(now), now, np.inf),
+                                  dtype=spec.dtype),
+                      jnp.asarray(np.maximum(self.bw_est, 1.0), dtype=spec.dtype))
+        batch = plan_batch_from_out(out, self.n_streams, len(self.acc_server))
+        if not active.all():  # inactive streams keep PlanBatch.empty rows
+            batch.theta[~active] = 0.0
+            batch.resolution[~active] = len(self.acc_server) - 1
+            batch.n_offloads[~active] = 0
+            batch.total_gain[~active] = 0.0
+            batch.base_acc[~active] = 0.0
+            sel = active[batch.off_stream]
+            batch.off_stream = batch.off_stream[sel]
+            batch.off_pos = batch.off_pos[sel]
+            batch.off_res = batch.off_res[sel]
+        batch.n_frames = self.state.lengths.copy()
         batch.planned = active.copy()
         return batch
 

@@ -182,9 +182,16 @@ class MultiStreamServer:
     def __init__(self, cfg: ServeConfig, fast_forward: Callable, slow_forward: Callable,
                  calibrate: Callable, uplink: Optional[Uplink], n_streams: int,
                  scheduler: Optional[FairScheduler] = None, stagger: bool = True,
-                 policy="cbo", fabric: Optional[EdgeFabric] = None):
+                 policy="cbo", fabric: Optional[EdgeFabric] = None,
+                 backend: str = "numpy"):
         if n_streams < 1:
             raise ValueError("n_streams must be >= 1")
+        if backend not in ("numpy", "jax"):
+            raise ValueError(f"backend must be 'numpy' or 'jax', got {backend!r}")
+        self.backend = backend
+        # optional per-round observer (the differential test harness): called
+        # with one dict per round — identical keys on both backends
+        self.round_hook = None
         self.cfg = cfg
         self.fast_forward = fast_forward
         self.slow_forward = slow_forward
@@ -235,6 +242,11 @@ class MultiStreamServer:
         )
         self.metrics = AggregateMetrics.for_streams(n_streams, uplink=self.uplink,
                                                     fabric=fabric)
+        if backend == "jax":
+            # fail fast on configurations the compiled path cannot express
+            from repro.serving.engine_jax import spec_from_server
+
+            spec_from_server(self)
 
     def process_streams(self, frames: np.ndarray,
                         labels: Optional[np.ndarray] = None,
@@ -257,6 +269,8 @@ class MultiStreamServer:
         if schedule.n_streams != S or schedule.n_frames != frames.shape[1]:
             raise ValueError("schedule shape must match frames (S, N)")
         self.metrics.wall_time = schedule.horizon
+        if self.backend == "jax":
+            return self._process_streams_jax(frames, labels, schedule)
 
         for start, arr, valid in schedule.rounds(B):
             b = arr.shape[1]
@@ -341,4 +355,133 @@ class MultiStreamServer:
                        if labels is not None else np.zeros(S, dtype=np.int64))
             self.metrics.update_round(valid.sum(axis=1), off_counts, miss_counts,
                                       correct, lat, valid)
+
+            if self.round_hook is not None:
+                ok_grid = np.zeros((S, b), dtype=bool)
+                ok_grid[q.stream[ok], q.slot[ok]] = True
+                self.round_hook({
+                    "start": start,
+                    "theta": theta.copy(), "res_idx": res_idx.copy(),
+                    "cap": cap.copy(), "n_off": batch.n_offloads.copy(),
+                    "n_frames": batch.n_frames.copy(),
+                    "off_stream": batch.off_stream.copy(),
+                    "off_pos": batch.off_pos.copy(),
+                    "off_res": batch.off_res.copy(),
+                    "esc": esc_mask, "ok": ok_grid, "lat": lat.copy(),
+                    "valid": valid.copy(), "correct": np.asarray(correct).copy(),
+                    "bw_est": self.fleet.bw_est.copy(),
+                    "lengths": self.fleet.state.lengths.copy(),
+                })
+        return self.metrics
+
+    def _process_streams_jax(self, frames, labels, schedule) -> AggregateMetrics:
+        """Compiled backend: precompute the neural tiers per round on the
+        host, then advance the whole replay as one jitted ``lax.scan``
+        (``serving/engine_jax.py``).  Decision/schedule semantics are pinned
+        to the numpy path by ``tests/test_fleet_jax.py``."""
+        import jax.numpy as jnp
+
+        from repro.serving import engine_jax as ej
+
+        cfg = self.cfg
+        S, B = self.n_streams, cfg.batch_size
+        resolutions = np.asarray(cfg.resolutions)
+        m = len(resolutions)
+        collect = "trace" if self.round_hook is not None else "metrics"
+        spec = ej.spec_from_server(self, collect=collect)
+        params = ej.params_from_server(self, spec)
+
+        # host precompute: confidences + per-resolution slow-tier
+        # correctness for every (frame, res) — both tiers are deterministic
+        # per frame, so this equals the numpy path's escalated-only batching
+        rounds = []
+        per_round = []
+        for start, arr, valid in schedule.rounds(B):
+            b = arr.shape[1]
+            flat = jnp.asarray(frames[:, start : start + b].reshape(
+                S * b, *frames.shape[2:]))
+            fp, cf = _fast_pass(cfg, self.fast_forward, self.calibrate, flat)
+            fast_preds = np.asarray(fp).reshape(S, b)
+            conf = np.asarray(cf).reshape(S, b)
+            lab = labels[:, start : start + b] if labels is not None else None
+            fast_ok = (fast_preds == lab) if lab is not None else np.zeros((S, b), bool)
+            slow_ok = np.zeros((S, b, m), dtype=bool)
+            if lab is not None:
+                for r in range(m):
+                    sp = np.asarray(slow_pass_multires(
+                        self.slow_forward, flat,
+                        np.full(S * b, resolutions[r]))).reshape(S, b)
+                    slow_ok[:, :, r] = sp == lab
+            pad = B - b
+            if pad:
+                arr = np.pad(arr, ((0, 0), (0, pad)), constant_values=np.inf)
+                valid = np.pad(valid, ((0, 0), (0, pad)))
+                conf = np.pad(conf, ((0, 0), (0, pad)), constant_values=np.inf)
+                fast_ok = np.pad(fast_ok, ((0, 0), (0, pad)))
+                slow_ok = np.pad(slow_ok, ((0, 0), (0, pad), (0, 0)))
+            rounds.append((arr, valid, conf, fast_ok, slow_ok))
+            per_round.append((start, b))
+        if not rounds:
+            return self.metrics
+        inputs = ej.RoundInputs(*(jnp.asarray(np.stack(cols))
+                                  for cols in zip(*rounds)))
+        carry, ys = ej.simulate(spec, params, inputs)
+
+        # fold per-round counters/latencies into the same AggregateMetrics
+        off = np.asarray(ys.off_counts)
+        miss = np.asarray(ys.miss_counts)
+        corr = np.asarray(ys.correct)
+        lat = np.asarray(ys.lat, dtype=np.float64)
+        for i, (start, b) in enumerate(per_round):
+            valid_i = rounds[i][1][:, :b]
+            self.metrics.update_round(valid_i.sum(axis=1), off[i], miss[i],
+                                      corr[i], lat[i][:, :b], valid_i)
+
+        # fold device state back into the host objects so summaries,
+        # contention counters and follow-on numpy rounds stay correct
+        for c, cell in enumerate(self.fabric.cells):
+            cell.uplink._busy_until = float(carry.cell_busy[c])
+            cell.uplink.n_transfers += int(carry.cell_n[c])
+            cell.uplink.busy_seconds += float(carry.cell_busy_s[c])
+            cell.uplink.queued_seconds += float(carry.cell_queued_s[c])
+        pool = self.fabric.pool
+        pool.busy_until[:] = np.asarray(carry.rep_busy, dtype=np.float64)
+        pool.n_jobs += np.asarray(carry.rep_n, dtype=np.int64)
+        pool.busy_seconds += np.asarray(carry.rep_busy_s, dtype=np.float64)
+        pool.queued_seconds += np.asarray(carry.rep_queued_s, dtype=np.float64)
+        self.fabric.placement._next = int(carry.rr_next)
+        self.fleet.bw_est[:] = np.asarray(carry.bw_est, dtype=np.float64)
+        from repro.policy.fleet_jax import unpad_fleet
+
+        arr_f, conf_f, lens = unpad_fleet(carry.fleet)
+        st = self.fleet.state
+        st.arrival = arr_f.astype(np.float64)
+        st.conf = conf_f.astype(np.float64)
+        st.stream_id = np.repeat(np.arange(S), lens)
+        st._rebuild_offsets()
+
+        if self.round_hook is not None:
+            for i, (start, b) in enumerate(per_round):
+                dec = np.asarray(ys.dec[i])
+                off_s, off_p = np.nonzero(dec >= 0)
+                self.round_hook({
+                    "start": start,
+                    "theta": np.asarray(ys.theta[i], dtype=np.float64),
+                    "res_idx": np.asarray(ys.res_idx[i], dtype=np.int64),
+                    "cap": np.asarray(ys.cap[i], dtype=np.int64),
+                    "n_off": np.asarray(ys.n_off[i], dtype=np.int64),
+                    "n_frames": np.asarray(ys.n_frames[i], dtype=np.int64),
+                    "off_stream": off_s.astype(np.int64),
+                    "off_pos": off_p.astype(np.int64),
+                    "off_res": dec[off_s, off_p].astype(np.int64),
+                    "esc": np.asarray(ys.esc[i])[:, :b],
+                    "ok": np.asarray(ys.ok[i])[:, :b],
+                    "lat": lat[i][:, :b],
+                    "valid": rounds[i][1][:, :b],
+                    "correct": corr[i].astype(np.int64),
+                    "bw_est": np.asarray(ys.bw_est[i], dtype=np.float64),
+                    "lengths": np.asarray(ys.lengths[i], dtype=np.int64),
+                    "overflow": np.asarray(ys.overflow[i]),
+                    "inexact": np.asarray(ys.inexact[i]),
+                })
         return self.metrics

@@ -1,0 +1,466 @@
+"""JAX serving engine: the whole fleet round as one jitted ``lax.scan`` step.
+
+``MultiStreamServer.process_streams`` runs plan -> transmit -> observe ->
+consume per round in host numpy (``serving/engine.py``).  This module is
+the same round, re-expressed in fixed shapes so ``jax.jit`` compiles it
+once and ``lax.scan`` advances it across rounds with zero host round
+trips.  The numpy engine stays the semantic reference: every ordering
+rule (escalation gate, SFQ tags, per-cell Lindley, placement, per-replica
+Lindley, EWMA fold) is reproduced with the same tie-breaks, and the
+differential tests (``tests/test_fleet_jax.py``) pin the two paths round
+by round.
+
+Shape/masking scheme (docs/jax_backend.md):
+
+  * rounds are padded to the batch size B — trailing partial rounds get
+    ``valid=False`` slots with ``arrival=+inf`` (never gate, never count);
+  * backlogs are a ``PaddedFleet`` of pad L == ``max_backlog``;
+  * one round's escalations live in the flat (S*B,) row space
+    (``flat = s*B + slot``); masked rows ride through every recursion as
+    no-ops — tx=0 / submit=-inf rows provably cannot perturb the running
+    max a Lindley recursion takes over live rows;
+  * the neural tiers run OUTSIDE the scan: confidences and per-resolution
+    slow-tier correctness are precomputed per round (deterministic per
+    frame, so identical to the numpy path's escalated-only batching) and
+    fed to the scan as (R, S, B[, m]) inputs.
+
+Stream-axis sharding: the carry's (S,)/(S, L)/(S, B) arrays are
+constrained to the ``"streams"`` logical axis (``sharding/axes.py``), so
+under a mesh the fleet splits across devices; off-mesh the constraint is
+a no-op and the engine runs identically on one CPU.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.policy.fleet_jax import (PaddedFleet, PlannerSpec, clear_fleet,
+                                    consume_fleet, ewma_fold, extend_fleet,
+                                    plan_fleet, prune_fleet)
+from repro.sharding.axes import shard
+
+__all__ = ["EngineSpec", "EngineParams", "RoundInputs", "EngineCarry",
+           "RoundTrace", "init_carry", "make_engine", "simulate",
+           "spec_from_server", "params_from_server"]
+
+_NEG = -jnp.inf
+
+
+# --------------------------------------------------------------------------- #
+# static spec + pytrees
+# --------------------------------------------------------------------------- #
+
+
+@dataclass(frozen=True)
+class EngineSpec:
+    """Everything the compiled round step specializes on."""
+
+    n_streams: int
+    batch: int  # B — round batch size (rounds are padded to it)
+    n_cells: int
+    n_replicas: int
+    planner: PlannerSpec
+    placement: str = "round_robin"  # round_robin | jsq | least_land
+    serial_replicas: bool = False
+    scheduler: str = "round_robin"  # round_robin | fifo
+    prune: bool = True  # BacklogPolicy.prune_expired
+    oneshot: bool = False  # OneShotPolicy consume semantics
+    t_fast: float = 0.028  # fast_time + calib_time
+    bw_alpha: float = 0.3
+    collect: str = "metrics"  # none | metrics | trace
+
+    @property
+    def m(self) -> int:
+        return self.planner.m
+
+    @property
+    def deadline(self) -> float:
+        return self.planner.deadline
+
+    @property
+    def latency(self) -> float:
+        return self.planner.latency
+
+
+class EngineParams(NamedTuple):
+    """Per-run device arrays the step closes over (not traced per round)."""
+
+    sizes: jnp.ndarray  # (m,) payload bytes per resolution
+    cell_bw: jnp.ndarray  # (C,) bytes/s (constant-rate uplinks only)
+    cell_of: jnp.ndarray  # (S,) int32
+    replica_st: jnp.ndarray  # (K,) per-replica service time
+    stream_bw: jnp.ndarray  # (S,) nominal cell rate (scheduler normalizer)
+    weights: jnp.ndarray  # (S,) scheduler weights (ones = unweighted)
+    bw_init: jnp.ndarray  # (S,) EWMA prior
+
+
+class RoundInputs(NamedTuple):
+    """One round of precomputed data-plane inputs (stack to (R, ...) for scan)."""
+
+    arr: jnp.ndarray  # (S, B) arrival seconds; +inf on invalid slots
+    valid: jnp.ndarray  # (S, B) bool
+    conf: jnp.ndarray  # (S, B) calibrated confidence (fast pass)
+    fast_ok: jnp.ndarray  # (S, B) bool — fast prediction correct
+    slow_ok: jnp.ndarray  # (S, B, m) bool — slow prediction correct per res
+
+
+class EngineCarry(NamedTuple):
+    fleet: PaddedFleet
+    bw_est: jnp.ndarray  # (S,)
+    cell_busy: jnp.ndarray  # (C,) uplink busy-until cursors
+    cell_n: jnp.ndarray  # (C,) int32 transfer counts
+    cell_busy_s: jnp.ndarray  # (C,)
+    cell_queued_s: jnp.ndarray  # (C,)
+    rep_busy: jnp.ndarray  # (K,)
+    rep_n: jnp.ndarray  # (K,) int32
+    rep_busy_s: jnp.ndarray  # (K,)
+    rep_queued_s: jnp.ndarray  # (K,)
+    rr_next: jnp.ndarray  # () int32 round-robin placement cursor
+    frames: jnp.ndarray  # (S,) int32
+    offloaded: jnp.ndarray  # (S,) int32
+    missed: jnp.ndarray  # (S,) int32
+    correct: jnp.ndarray  # (S,) int32
+
+
+class RoundTrace(NamedTuple):
+    """Per-round outputs (``collect`` >= "metrics"; trace adds decisions)."""
+
+    off_counts: jnp.ndarray  # (S,) int32
+    miss_counts: jnp.ndarray  # (S,) int32
+    correct: jnp.ndarray  # (S,) int32
+    lat: jnp.ndarray  # (S, B)
+    # -- collect == "trace" extras (zero-size placeholders otherwise) ----- #
+    theta: jnp.ndarray
+    res_idx: jnp.ndarray
+    cap: jnp.ndarray
+    n_off: jnp.ndarray
+    n_frames: jnp.ndarray  # post-prune backlog lengths at plan time
+    dec: jnp.ndarray  # (S, L) int8
+    esc: jnp.ndarray  # (S, B) bool
+    ok: jnp.ndarray  # (S, B) bool
+    bw_est: jnp.ndarray  # (S,) after the round's EWMA fold
+    lengths: jnp.ndarray  # (S,) backlog lengths after extend
+    overflow: jnp.ndarray  # (S,) bool
+    inexact: jnp.ndarray  # (S,) bool
+
+
+def init_carry(spec: EngineSpec, params: EngineParams) -> EngineCarry:
+    S, C, K, L = spec.n_streams, spec.n_cells, spec.n_replicas, spec.planner.L
+    dt = spec.planner.dtype
+    z = lambda *s: jnp.zeros(s, dtype=dt)
+    zi = lambda *s: jnp.zeros(s, dtype=jnp.int32)
+    fleet = PaddedFleet(z(S, L), z(S, L), zi(S))
+    return EngineCarry(
+        fleet=fleet, bw_est=params.bw_init.astype(dt),
+        cell_busy=z(C), cell_n=zi(C), cell_busy_s=z(C), cell_queued_s=z(C),
+        rep_busy=z(K), rep_n=zi(K), rep_busy_s=z(K), rep_queued_s=z(K),
+        rr_next=jnp.zeros((), jnp.int32),
+        frames=zi(S), offloaded=zi(S), missed=zi(S), correct=zi(S))
+
+
+# --------------------------------------------------------------------------- #
+# masked recursions
+# --------------------------------------------------------------------------- #
+
+
+def _masked_lindley(sub, tx, mask, busy0):
+    """end_i = max(sub_i, end_{i-1}) + tx_i over the masked rows, with
+    masked rows as exact no-ops: tx=0 / sub=-inf rows contribute the
+    candidate ``busy0 - excl <= busy0``, which the first live row's
+    ``max(sub, busy0) - 0 >= busy0`` already dominates, so the running max
+    over live rows is untouched.  Returns (end, new_busy, wire, queued)."""
+    txm = jnp.where(mask, tx, 0.0)
+    subm = jnp.where(mask, sub, _NEG)
+    csum = jnp.cumsum(txm)
+    eff = jnp.maximum(subm, busy0) - (csum - txm)
+    end = jax.lax.cummax(eff) + csum
+    any_live = mask.any()
+    new_busy = jnp.where(any_live, jnp.where(mask, end, _NEG).max(), busy0)
+    wire = txm.sum()
+    queued = jnp.where(mask, jnp.clip(end - txm - subm, 0.0, None), 0.0).sum()
+    return end, new_busy, wire, queued
+
+
+def _lexsort2(primary, rows_sorted_by_secondary):
+    """Stable argsort by ``primary`` applied on top of an existing stable
+    secondary order — the composed-argsort form of ``np.lexsort``."""
+    o = rows_sorted_by_secondary
+    return o[jnp.argsort(primary[o])]
+
+
+# --------------------------------------------------------------------------- #
+# the round step
+# --------------------------------------------------------------------------- #
+
+
+def _round_step(spec: EngineSpec, params: EngineParams,
+                carry: EngineCarry, x: RoundInputs):
+    S, B, C, K = spec.n_streams, spec.batch, spec.n_cells, spec.n_replicas
+    L, m = spec.planner.L, spec.m
+    dt = spec.planner.dtype
+    N = S * B
+    inf = jnp.inf
+    arr = shard(x.arr.astype(dt), "streams", None)
+    valid, conf = x.valid, x.conf.astype(dt)
+
+    # (1) active streams; retire the rest (FleetRunner.retire)
+    active = valid.any(axis=1)
+    fleet = clear_fleet(carry.fleet, ~active)
+
+    # (2) control plane: prune + one batched plan (FleetRunner.plan_all)
+    now = arr.min(axis=1)  # first valid arrival; +inf when none
+    prune_mask = active if spec.prune else jnp.zeros_like(active)
+    fleet = prune_fleet(fleet, now, spec.deadline, prune_mask)
+    fleet = PaddedFleet(shard(fleet.arrival, "streams", None),
+                        shard(fleet.conf, "streams", None),
+                        shard(fleet.length, "streams"))
+    bw_plan = jnp.maximum(carry.bw_est, 1.0)  # same dead-link floor
+    plan = plan_fleet(spec.planner, fleet, now, bw_plan)
+    theta = jnp.where(active, plan.theta, 0.0)
+    res_idx = jnp.where(active, plan.resolution, m - 1)
+    n_off = jnp.where(active, plan.n_offloads, 0)
+    dec = jnp.where(active[:, None], plan.dec, jnp.int8(-1))
+    cap = jnp.where(active, jnp.maximum(n_off, 1), 0)
+
+    # (3) escalation gate (select_escalations): per stream the cap lowest
+    # confidences below theta — stable conf argsort + cumsum gate
+    conf_gate = jnp.where(valid, conf, inf)
+    o_slot = jnp.argsort(conf_gate, axis=1)
+    gate_sorted = jnp.take_along_axis(conf_gate < theta[:, None], o_slot, axis=1)
+    take_sorted = gate_sorted & (jnp.cumsum(gate_sorted, axis=1) <= cap[:, None])
+    esc = jnp.zeros((S, B), bool).at[
+        jnp.arange(S)[:, None], o_slot].set(take_sorted)
+
+    payload_s = params.sizes[res_idx].astype(dt)  # (S,) planned upload bytes
+    t_ready = arr + spec.t_fast
+
+    # (4) fair uplink schedule (FairScheduler.order).  Cost is constant per
+    # stream within a round, so the SFQ tag recurrence unrolls over slots
+    # (per-stream arrivals strictly ascend, so slot order == t_ready order).
+    esc_flat = esc.reshape(-1)
+    t_ready_flat = jnp.where(esc, t_ready, inf).reshape(-1)
+    o = jnp.argsort(t_ready_flat)  # stable: ties keep (stream, slot) order
+    if spec.scheduler == "round_robin":
+        cost_s = payload_s / params.stream_bw / params.weights
+        tags = jnp.full((S, B), inf, dtype=dt)
+        prev = jnp.full((S,), _NEG, dtype=dt)
+        for d in range(B):
+            cand = jnp.maximum(t_ready[:, d], prev + cost_s)
+            tags = tags.at[:, d].set(jnp.where(esc[:, d], cand, inf))
+            prev = jnp.where(esc[:, d], cand, prev)
+        o = _lexsort2(tags.reshape(-1), o)
+
+    # (5) fabric transmit: per-cell masked Lindley over the scheduled rows
+    stream_flat = jnp.repeat(jnp.arange(S, dtype=jnp.int32), B)
+    s_o = stream_flat[o]
+    m_o = esc_flat[o]
+    sub_o = x.arr.reshape(-1)[o] + spec.t_fast  # real t_ready per row
+    pay_o = params.sizes[res_idx[s_o]].astype(dt)
+    cell_o = params.cell_of[s_o]
+    end_tx = jnp.zeros((N,), dtype=dt)
+    cell_busy, cell_n = carry.cell_busy, carry.cell_n
+    cell_busy_s, cell_queued_s = carry.cell_busy_s, carry.cell_queued_s
+    for c in range(C):
+        mk = m_o & (cell_o == c)
+        end_c, busy_c, wire_c, queued_c = _masked_lindley(
+            sub_o, pay_o / params.cell_bw[c], mk, cell_busy[c])
+        end_tx = jnp.where(mk, end_c, end_tx)
+        cell_busy = cell_busy.at[c].set(busy_c)
+        cell_n = cell_n.at[c].add(mk.sum(dtype=jnp.int32))
+        cell_busy_s = cell_busy_s.at[c].add(wire_c)
+        cell_queued_s = cell_queued_s.at[c].add(queued_c)
+
+    # (6) replica placement in upload-arrival order (Placement.assign)
+    end_m = jnp.where(m_o, end_tx, inf)
+    o2 = jnp.argsort(end_m)  # stable: ties keep scheduler order
+    m2 = m_o[o2]
+    rr_next = carry.rr_next
+    if spec.placement == "round_robin":
+        rank = jnp.cumsum(m2.astype(jnp.int32)) - 1
+        rep2 = (rr_next + rank) % K
+        rr_next = (rr_next + m_o.sum(dtype=jnp.int32)) % K
+    else:
+        st = params.replica_st.astype(dt)
+
+        def pstep(busy, inp):
+            t_i, live = inp
+            if spec.placement == "jsq":
+                k = jnp.argmin(busy)
+            else:  # least_land
+                k = jnp.argmin(jnp.maximum(t_i, busy) + st)
+            upd = busy.at[k].set(jnp.maximum(t_i, busy[k]) + st[k])
+            return jnp.where(live, upd, busy), jnp.where(live, k, 0).astype(jnp.int32)
+
+        _, rep2 = jax.lax.scan(pstep, carry.rep_busy.astype(dt), (end_m[o2], m2))
+    replica_o = jnp.zeros((N,), jnp.int32).at[o2].set(rep2.astype(jnp.int32))
+
+    # (7) replica pool service (ReplicaPool.process)
+    rep_busy, rep_n = carry.rep_busy, carry.rep_n
+    rep_busy_s, rep_queued_s = carry.rep_busy_s, carry.rep_queued_s
+    st_row = params.replica_st[replica_o].astype(dt)
+    if spec.serial_replicas:
+        repk = jnp.where(m_o, replica_o, K)
+        o3 = _lexsort2(repk.astype(dt), jnp.argsort(jnp.where(m_o, end_tx, inf)))
+        m3 = m_o[o3]
+        a3, k3 = end_tx[o3], repk[o3]
+        done3 = jnp.zeros((N,), dtype=dt)
+        for k in range(K):
+            mk = m3 & (k3 == k)
+            end_k, busy_k, wire_k, queued_k = _masked_lindley(
+                a3, jnp.full((N,), params.replica_st[k], dtype=dt), mk, rep_busy[k])
+            done3 = jnp.where(mk, end_k, done3)
+            rep_busy = rep_busy.at[k].set(busy_k)
+            rep_n = rep_n.at[k].add(mk.sum(dtype=jnp.int32))
+            rep_busy_s = rep_busy_s.at[k].add(wire_k)
+            rep_queued_s = rep_queued_s.at[k].add(queued_k)
+        done_o = jnp.zeros((N,), dtype=dt).at[o3].set(done3)
+    else:  # infinite-capacity fixed delay (paper semantics)
+        done_o = end_tx + st_row
+        for k in range(K):
+            mk = m_o & (replica_o == k)
+            rep_n = rep_n.at[k].add(mk.sum(dtype=jnp.int32))
+            rep_busy_s = rep_busy_s.at[k].add(
+                jnp.where(mk, st_row, 0.0).sum())
+            rep_busy = rep_busy.at[k].set(jnp.maximum(
+                rep_busy[k], jnp.where(mk, done_o, _NEG).max()))
+    lands_o = done_o + spec.latency
+
+    # (8) deadline check + final correctness
+    arr_o = x.arr.reshape(-1)[o].astype(dt)
+    ok_o = m_o & (lands_o <= arr_o + spec.deadline)
+    lands_grid = jnp.zeros((N,), dtype=dt).at[o].set(lands_o).reshape(S, B)
+    ok_grid = jnp.zeros((N,), bool).at[o].set(ok_o).reshape(S, B)
+    slow_sel = jnp.take_along_axis(
+        x.slow_ok, res_idx[:, None, None].astype(jnp.int32), axis=2)[..., 0]
+    final_ok = jnp.where(ok_grid, slow_sel, x.fast_ok)
+    correct_r = (final_ok & valid).sum(axis=1, dtype=jnp.int32)
+
+    # (9) EWMA bandwidth observations in transmission order
+    # (FleetRunner.observe_bandwidth; replica queueing deliberately included)
+    seconds_o = lands_o - sub_o - spec.latency - st_row
+    okbw = m_o & (seconds_o > 1e-9)
+    rate_o = pay_o / jnp.where(okbw, seconds_o, 1.0)
+    bw_est = ewma_fold(carry.bw_est, spec.bw_alpha, s_o, rate_o, okbw, S, B)
+    bw_est = shard(bw_est, "streams")
+
+    # (10) backlog bookkeeping: consume planned offloads, extend the rest
+    if spec.oneshot:
+        fleet = clear_fleet(fleet, active)
+    else:
+        fleet = consume_fleet(fleet, dec >= 0, jnp.zeros((S,), bool))
+    add = valid & ~esc
+    fleet = extend_fleet(fleet, arr, conf, add, spec.planner.L)
+
+    # (11) metrics (AggregateMetrics.update_round inputs)
+    lat = jnp.full((S, B), spec.t_fast, dtype=dt)
+    lat = jnp.where(ok_grid, lands_grid - arr, lat)
+    miss_grid = esc & ~ok_grid
+    lat = jnp.where(miss_grid, spec.deadline, lat)
+    off_counts = ok_grid.sum(axis=1, dtype=jnp.int32)
+    miss_counts = miss_grid.sum(axis=1, dtype=jnp.int32)
+
+    out = EngineCarry(
+        fleet=fleet, bw_est=bw_est,
+        cell_busy=cell_busy, cell_n=cell_n, cell_busy_s=cell_busy_s,
+        cell_queued_s=cell_queued_s,
+        rep_busy=rep_busy, rep_n=rep_n, rep_busy_s=rep_busy_s,
+        rep_queued_s=rep_queued_s, rr_next=rr_next,
+        frames=carry.frames + valid.sum(axis=1, dtype=jnp.int32),
+        offloaded=carry.offloaded + off_counts,
+        missed=carry.missed + miss_counts,
+        correct=carry.correct + correct_r)
+
+    if spec.collect == "none":
+        return out, None
+    z0 = jnp.zeros((0,))
+    extras = dict(theta=z0, res_idx=z0, cap=z0, n_off=z0, n_frames=z0,
+                  dec=z0, esc=z0, ok=z0, bw_est=z0, lengths=z0,
+                  overflow=z0, inexact=z0)
+    if spec.collect == "trace":
+        extras = dict(theta=theta, res_idx=res_idx, cap=cap, n_off=n_off,
+                      n_frames=plan.n_frames, dec=dec, esc=esc, ok=ok_grid,
+                      bw_est=bw_est, lengths=fleet.length,
+                      overflow=plan.overflow, inexact=plan.inexact)
+    ys = RoundTrace(off_counts=off_counts, miss_counts=miss_counts,
+                    correct=correct_r, lat=lat, **extras)
+    return out, ys
+
+
+def make_engine(spec: EngineSpec):
+    """jit-compiled ``lax.scan`` over rounds, closed over the static spec.
+
+    Returns ``run(params, carry, inputs) -> (carry, RoundTrace | None)``
+    where ``inputs`` is a ``RoundInputs`` of (R, ...) stacked rounds.
+    """
+
+    def run(params: EngineParams, carry: EngineCarry, inputs: RoundInputs):
+        step = lambda c, x: _round_step(spec, params, c, x)
+        return jax.lax.scan(step, carry, inputs)
+
+    return jax.jit(run)
+
+
+def simulate(spec: EngineSpec, params: EngineParams, inputs: RoundInputs,
+             carry: Optional[EngineCarry] = None):
+    """One-shot convenience: init carry (unless given), run the scan."""
+    if carry is None:
+        carry = init_carry(spec, params)
+    return make_engine(spec)(params, carry, inputs)
+
+
+# --------------------------------------------------------------------------- #
+# bridges from the numpy serving stack
+# --------------------------------------------------------------------------- #
+
+
+def spec_from_server(server, collect: str = "metrics") -> EngineSpec:
+    """Build the static spec from a ``MultiStreamServer`` (validating that
+    the configuration is expressible in fixed shapes)."""
+    from repro.policy.base import OneShotPolicy
+    from repro.policy.fleet_jax import spec_for_policy
+
+    fleet = server.fleet
+    if len(fleet.groups) != 1:
+        raise ValueError("backend='jax' needs a homogeneous fleet "
+                         f"(one policy group); got {len(fleet.groups)}")
+    policy = fleet.groups[0][0]
+    for cell in server.fabric.cells:
+        up = cell.uplink
+        if up.jitter > 0 or up.trace is not None:
+            raise ValueError("backend='jax' supports constant-rate cell "
+                             "uplinks only (no jitter/trace)")
+    planner = spec_for_policy(
+        policy, sizes=fleet.sizes, acc_server=fleet.acc_server,
+        deadline=fleet.deadline, latency=fleet.latency,
+        server_time=fleet.server_time)
+    return EngineSpec(
+        n_streams=server.n_streams, batch=server.cfg.batch_size,
+        n_cells=server.fabric.n_cells, n_replicas=server.fabric.n_replicas,
+        planner=planner, placement=server.fabric.placement.policy,
+        serial_replicas=server.fabric.pool.serial,
+        scheduler=server.scheduler.policy,
+        prune=bool(getattr(policy, "prune_expired", True)),
+        oneshot=isinstance(policy, OneShotPolicy),
+        t_fast=float(server.cfg.fast_time + server.cfg.calib_time),
+        bw_alpha=fleet.bw_alpha, collect=collect)
+
+
+def params_from_server(server, spec: EngineSpec) -> EngineParams:
+    dt = spec.planner.dtype
+    sched_w = server.scheduler.weights
+    weights = (np.ones(server.n_streams) if sched_w is None
+               else np.asarray(sched_w, dtype=np.float64))
+    return EngineParams(
+        sizes=jnp.asarray(server.fleet.sizes, dtype=dt),
+        cell_bw=jnp.asarray([c.uplink.bandwidth_bps for c in server.fabric.cells],
+                            dtype=dt),
+        cell_of=jnp.asarray(server.fabric.cell_of, dtype=jnp.int32),
+        replica_st=jnp.asarray(server.fabric.pool.server_time, dtype=dt),
+        stream_bw=jnp.asarray(server._stream_bw, dtype=dt),
+        weights=jnp.asarray(weights, dtype=dt),
+        bw_init=jnp.asarray(server.fleet.bw_est, dtype=dt))

@@ -31,6 +31,8 @@ DEFAULT_RULES: dict[str, Optional[str]] = {
     "vocab_act": "model",
     "experts_act": "model",
     "spatial": "data",  # diffusion gen small-batch spatial rows
+    "streams": "data",  # serving fleet stream axis (policy/fleet_jax,
+                        # serving/engine_jax): S=1e5+ fleets split across devices
     # params
     "layers": None,
     "stack": None,

@@ -1,0 +1,145 @@
+"""Differential harness: pin the JAX round loop to the numpy reference.
+
+The exactness policy (docs/jax_backend.md): the numpy stack plans and
+simulates in float64, the JAX stack in float32 — so every INTEGER outcome
+(offload decisions, escalation sets, schedule/placement assignments,
+deadline hits, backlog lengths, metric counts) must match bit-for-bit,
+while FLOAT state (theta, EWMA bandwidth, latencies) is compared at a
+tolerance that covers float32 accumulation of absolute timestamps
+(~1e-7 * t catastrophic cancellation against ~1e-5 s wire times — see
+``BW_RTOL``).  Workloads use ``frame_rate=32`` so arrival grids are
+exactly representable in both precisions and the prune/deadline compares
+are tie-free; the two backends are then comparable decision-for-decision.
+
+``run_differential`` replays one seeded workload through both backends of
+``MultiStreamServer`` with a ``round_hook`` attached, asserts every round
+record pair with ``assert_round_equal``, and returns the two
+``AggregateMetrics`` (whose integer counters must already agree).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+# float tolerances: theta is a copied confidence (f32-exact on both
+# sides); bandwidth estimates and latencies accumulate f32 timestamp
+# error, which the exactness policy bounds at tolerance, not bit-equality
+THETA_ATOL = 1e-6
+BW_RTOL = 1e-2
+LAT_ATOL = 1e-4
+
+# integer-exact record keys (the regression gate) vs tolerance floats
+EXACT_KEYS = ("res_idx", "cap", "n_off", "n_frames", "off_stream", "off_pos",
+              "off_res", "lengths", "correct", "esc", "ok", "valid")
+
+
+def assert_fleet_equal(numpy_state, jax_state, atol: float = 1e-6) -> None:
+    """Backlog-state equivalence: a ragged ``FleetState`` against a padded
+    ``PaddedFleet`` (or another ``FleetState``).  Lengths and per-slot
+    order are exact; arrival/conf values compare at ``atol``."""
+    from repro.policy.fleet_jax import PaddedFleet, unpad_fleet
+
+    if isinstance(jax_state, PaddedFleet):
+        j_arr, j_conf, j_lens = unpad_fleet(jax_state)
+    else:
+        j_arr, j_conf, j_lens = (np.asarray(jax_state.arrival),
+                                 np.asarray(jax_state.conf),
+                                 np.asarray(jax_state.lengths))
+    n_arr, n_conf, n_lens = (np.asarray(numpy_state.arrival),
+                             np.asarray(numpy_state.conf),
+                             np.asarray(numpy_state.lengths))
+    assert np.array_equal(n_lens, j_lens), (n_lens, j_lens)
+    np.testing.assert_allclose(j_arr, n_arr, atol=atol)
+    np.testing.assert_allclose(j_conf, n_conf, atol=atol)
+
+
+def assert_round_equal(numpy_rec: dict, jax_rec: dict, *, ctx="",
+                       theta_atol=THETA_ATOL, bw_rtol=BW_RTOL,
+                       lat_atol=LAT_ATOL) -> None:
+    """One round's record pair (``MultiStreamServer.round_hook`` dicts)."""
+    for k in EXACT_KEYS:
+        assert np.array_equal(numpy_rec[k], jax_rec[k]), (
+            f"{ctx}: integer mismatch on {k!r}:\n"
+            f"  numpy={numpy_rec[k]!r}\n  jax={jax_rec[k]!r}")
+    np.testing.assert_allclose(jax_rec["theta"], numpy_rec["theta"],
+                               atol=theta_atol, err_msg=f"{ctx}: theta")
+    np.testing.assert_allclose(jax_rec["bw_est"], numpy_rec["bw_est"],
+                               rtol=bw_rtol, err_msg=f"{ctx}: bw_est")
+    np.testing.assert_allclose(jax_rec["lat"], numpy_rec["lat"],
+                               atol=lat_atol, err_msg=f"{ctx}: lat")
+    # the JAX planner flags configurations its float32 eps-window prune or
+    # capped frontier cannot represent; differential workloads must be clean
+    if "overflow" in jax_rec:
+        assert not np.any(jax_rec["overflow"]), f"{ctx}: frontier overflow"
+    if "inexact" in jax_rec:
+        assert not np.any(jax_rec["inexact"]), f"{ctx}: inexact eps-window prune"
+
+
+def make_server(backend: str, *, S: int, policy="cbo", scheduler="round_robin",
+                topology="degenerate", placement="jsq", frame_rate=32.0,
+                bw_mbps=50.0, seed=0):
+    """One ``MultiStreamServer`` on the canonical differential config.
+
+    ``frame_rate=32`` keeps the arrival grid exactly representable in
+    float32 — a deliberate part of the exactness policy, not an accident.
+    """
+    from repro.core.netsim import Uplink, mbps
+    from repro.net import EdgeFabric, ReplicaPool
+    from repro.serving import FairScheduler, MultiStreamServer, ServeConfig
+    from repro.serving.synthetic import synthetic_tiers
+
+    fast, slow, cal = synthetic_tiers()
+    cfg = ServeConfig(resolutions=(4, 8), acc_server=(0.7, 0.99), batch_size=16,
+                      frame_rate=frame_rate, deadline=0.2)
+    if topology == "degenerate":
+        fab = EdgeFabric.degenerate(
+            Uplink(bandwidth_bps=mbps(bw_mbps), latency=0.05,
+                   server_time=cfg.server_time), n_streams=S)
+    else:  # C=2 cells, K=2 heterogeneous serial replicas
+        ups = [Uplink(bandwidth_bps=mbps(bw_mbps * 0.6), latency=0.05,
+                      server_time=cfg.server_time, seed=seed + c)
+               for c in range(2)]
+        pool = ReplicaPool(2, np.array([cfg.server_time, cfg.server_time * 1.5]),
+                           serial=True)
+        fab = EdgeFabric(ups, pool, n_streams=S, placement=placement)
+    return MultiStreamServer(cfg, fast, slow, cal, None, n_streams=S,
+                             scheduler=FairScheduler(scheduler), fabric=fab,
+                             policy=policy, backend=backend), cfg
+
+
+def run_differential(*, S: int, policy="cbo", scheduler="round_robin",
+                     topology="degenerate", placement="jsq", churn=False,
+                     n_frames=64, seed=0, frame_rate=32.0, bw_mbps=50.0):
+    """Replay one seeded workload through both backends and assert every
+    round record matches.  Returns (numpy_metrics, jax_metrics)."""
+    from repro.serving.events import ArrivalSchedule
+    from repro.serving.synthetic import synthetic_streams
+
+    imgs, labels = synthetic_streams(S, n_frames, seed=seed)
+    sched = None
+    if churn:
+        rng = np.random.default_rng(seed + 1)
+        join = rng.integers(0, n_frames // 2, size=S)
+        length = rng.integers(1, n_frames - join + 1)
+        sched = ArrivalSchedule.churn(S, n_frames, frame_rate, 0.2,
+                                      join=join, length=length)
+    records = {}
+    metrics = {}
+    for backend in ("numpy", "jax"):
+        srv, cfg = make_server(backend, S=S, policy=policy, scheduler=scheduler,
+                               topology=topology, placement=placement,
+                               frame_rate=frame_rate, bw_mbps=bw_mbps, seed=seed)
+        recs = []
+        srv.round_hook = recs.append
+        metrics[backend] = srv.process_streams(imgs, labels, schedule=sched)
+        records[backend] = recs
+    rn, rj = records["numpy"], records["jax"]
+    assert len(rn) == len(rj), (len(rn), len(rj))
+    desc = f"S={S} {policy}/{scheduler}/{topology}"
+    for i, (a, b) in enumerate(zip(rn, rj)):
+        assert_round_equal(a, b, ctx=f"{desc} round {i}")
+    mn, mj = metrics["numpy"], metrics["jax"]
+    assert mn.n_frames == mj.n_frames
+    assert mn.n_offloaded == mj.n_offloaded, (mn.n_offloaded, mj.n_offloaded)
+    assert mn.n_deadline_miss == mj.n_deadline_miss
+    assert mn.accuracy == mj.accuracy
+    return mn, mj

@@ -68,6 +68,40 @@ def multistream_snapshot():
     print("multistream_snapshot.json: 4-stream aggregate + single-stream reference")
 
 
+def fabric_snapshot():
+    """Non-degenerate golden snapshot pinned by BOTH backends.
+
+    Two configs at ``frame_rate=32`` (the tie-free arrival grid from the
+    exactness policy in ``tests/_diff.py`` — fr=30 puts ``arr + deadline``
+    exactly on a frame boundary, which f64 and f32 round differently):
+    the degenerate single-uplink fabric and a C=2-cell / K=2-replica
+    (heterogeneous serial, JSQ placement) fabric.  Generated from the
+    numpy path; ``tests/test_fleet_jax.py`` pins numpy AND jax to it.
+    """
+    from _diff import make_server
+    from repro.serving.synthetic import synthetic_streams
+
+    # S=12 on the 2-replica serial pool saturates the server tier (deadline
+    # misses + EWMA-driven offload backoff), so the fabric entry pins real
+    # queueing behavior, not a copy of the degenerate one
+    snap = {}
+    for topology, S in (("degenerate", 4), ("fabric", 12)):
+        imgs, labels = synthetic_streams(S, 64)
+        srv, _cfg = make_server("numpy", S=S, topology=topology)
+        agg = srv.process_streams(imgs, labels)
+        snap[topology] = {
+            "per_stream": [{"accuracy": m.accuracy, "offload_frac": m.offload_frac,
+                            "deadline_miss_frac": m.deadline_miss_frac,
+                            "n_frames": m.n_frames}
+                           for m in agg.per_stream],
+            "accuracy": agg.accuracy, "n_offloaded": int(agg.n_offloaded),
+            "n_deadline_miss": int(agg.n_deadline_miss)}
+    with open(os.path.join(HERE, "fabric_snapshot.json"), "w") as f:
+        json.dump(snap, f, indent=1)
+    print("fabric_snapshot.json: degenerate + C2/K2-jsq configs at frame_rate=32")
+
+
 if __name__ == "__main__":
     replay_fixture()
     multistream_snapshot()
+    fabric_snapshot()

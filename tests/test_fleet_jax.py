@@ -1,0 +1,239 @@
+"""Differential gate for the JAX backend: jax == numpy, decision-for-decision.
+
+Three layers, all driven through ``tests/_diff.py``:
+
+* planner parity — ``FleetRunner(backend="jax")._plan_all_jax`` against the
+  numpy ``plan_all`` on identical fuzzed backlogs (four policies, active
+  masks, tie-heavy confidences): every integer field of the ``PlanBatch``
+  bit-equal, floats at float32 tolerance;
+* round-loop parity — ``run_differential`` replays seeded workloads through
+  both ``MultiStreamServer`` backends with the ``round_hook`` attached and
+  asserts every round record (S in {1, 3, 17}, degenerate + C2/K2 fabric,
+  cbo/threshold, round_robin/fifo, churn on/off, jsq/least_land);
+* golden pins — BOTH backends must reproduce
+  ``tests/data/fabric_snapshot.json`` (frame_rate=32, the tie-free grid).
+
+Plus a sharding smoke: the jax engine under ``sharding_ctx(make_local_mesh())``
+must agree with its own off-mesh run (``shard`` constraints are layout
+hints, never semantics).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from _diff import (THETA_ATOL, assert_fleet_equal, make_server,
+                   run_differential)
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+
+
+# --------------------------------------------------------------------- #
+# planner parity: FleetRunner(backend="jax") vs numpy plan_all
+# --------------------------------------------------------------------- #
+
+def make_runner(backend, policy_name, S, mb=12):
+    from repro.core.netsim import png_size_model
+    from repro.policy.fleet import FleetRunner
+    from repro.policy.registry import make_policy
+
+    kw = {"max_backlog": mb}
+    if policy_name == "server":
+        kw["frame_interval"] = 1.0 / 32.0
+    return FleetRunner([make_policy(policy_name, **kw) for _ in range(S)],
+                       resolutions=(4, 8), acc_server=(0.7, 0.99), deadline=0.2,
+                       latency=0.05, server_time=0.037, size_of=png_size_model,
+                       bw_init=50e6 / 8, backend=backend)
+
+
+def fuzz_backlog(S, mb, seed, conf_grid=None):
+    """One seeded ragged workload: per-stream ascending arrivals on the
+    1/32 grid (exactly representable in f32 — tie-free prune compares),
+    confidences either uniform or drawn from a coarse tie-heavy grid."""
+    rng = np.random.default_rng(seed)
+    lens = rng.integers(0, mb + 1, size=S)
+    stream = np.repeat(np.arange(S), lens)
+    t0 = rng.integers(0, 64, size=S) / 32.0
+    pos = np.concatenate([np.arange(n) for n in lens]) if lens.sum() else np.zeros(0)
+    arrival = t0[stream] + pos / 32.0
+    if conf_grid is None:
+        conf = rng.uniform(0.05, 0.95, size=lens.sum())
+    else:
+        conf = np.asarray(conf_grid)[rng.integers(0, len(conf_grid), size=lens.sum())]
+    # plan a fraction of a frame after each stream's newest arrival
+    now = t0 + (lens + 0.5) / 32.0
+    bw = rng.uniform(2e5, 1e7, size=S)
+    active = rng.random(S) < 0.8
+    now = np.where(active, now, np.inf)
+    return stream, arrival, conf, now, bw, active
+
+
+def assert_plan_equal(pn, pj, ctx=""):
+    for k in ("resolution", "n_offloads", "n_frames", "off_stream", "off_pos",
+              "off_res", "planned"):
+        assert np.array_equal(getattr(pn, k), getattr(pj, k)), (
+            f"{ctx}: {k}: numpy={getattr(pn, k)!r} jax={getattr(pj, k)!r}")
+    np.testing.assert_allclose(pj.theta, pn.theta, atol=THETA_ATOL,
+                               err_msg=f"{ctx}: theta")
+    np.testing.assert_allclose(pj.total_gain, pn.total_gain, atol=1e-4,
+                               err_msg=f"{ctx}: total_gain")
+    np.testing.assert_allclose(pj.base_acc, pn.base_acc, atol=1e-4,
+                               err_msg=f"{ctx}: base_acc")
+
+
+@pytest.mark.parametrize("policy", ["cbo", "threshold", "local", "server"])
+@pytest.mark.parametrize("S", [1, 3, 17])
+def test_planner_parity(policy, S):
+    for seed in range(4):
+        rn = make_runner("numpy", policy, S)
+        rj = make_runner("jax", policy, S)
+        stream, arrival, conf, now, bw, active = fuzz_backlog(S, 12, 100 * S + seed)
+        for r in (rn, rj):
+            r.observe_frames(stream, arrival, conf)
+            r.bw_est[:] = bw
+        pn = rn.plan_all(now, active)
+        pj = rj.plan_all(now, active)
+        assert_plan_equal(pn, pj, ctx=f"{policy} S={S} seed={seed}")
+        assert_fleet_equal(rn.state, rj.state)  # post-prune state agrees too
+
+
+@pytest.mark.parametrize("policy", ["cbo", "threshold"])
+def test_planner_parity_tie_heavy(policy):
+    # coarse confidence grid => many exact ties; stable tie-breaking in the
+    # DP / threshold selection must match the numpy reference bit-for-bit
+    for seed in range(4):
+        rn = make_runner("numpy", policy, 9)
+        rj = make_runner("jax", policy, 9)
+        stream, arrival, conf, now, bw, active = fuzz_backlog(
+            9, 12, 7000 + seed, conf_grid=(0.3, 0.5, 0.5, 0.7))
+        for r in (rn, rj):
+            r.observe_frames(stream, arrival, conf)
+            r.bw_est[:] = bw
+        assert_plan_equal(rn.plan_all(now, active), rj.plan_all(now, active),
+                          ctx=f"tie-heavy {policy} seed={seed}")
+
+
+def test_runner_backend_validation():
+    from repro.core.netsim import png_size_model
+    from repro.policy.fleet import FleetRunner
+    from repro.policy.registry import make_policy
+
+    common = dict(resolutions=(4, 8), acc_server=(0.7, 0.99), deadline=0.2,
+                  latency=0.05, server_time=0.037, size_of=png_size_model)
+    with pytest.raises(ValueError, match="backend"):
+        FleetRunner([make_policy("cbo", max_backlog=8)], backend="torch", **common)
+    # heterogeneous fleets have >1 policy group: numpy-only
+    with pytest.raises(ValueError, match="homogeneous"):
+        FleetRunner([make_policy("cbo", max_backlog=8),
+                     make_policy("threshold", max_backlog=8)],
+                    backend="jax", **common)
+    # unbounded backlogs cannot be padded to fixed shapes
+    with pytest.raises(ValueError, match="max_backlog"):
+        FleetRunner([make_policy("cbo", max_backlog=None)], backend="jax", **common)
+
+
+# --------------------------------------------------------------------- #
+# round-loop parity: MultiStreamServer(backend="jax") vs numpy
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("S", [1, 3, 17])
+def test_round_loop_parity_degenerate(S):
+    run_differential(S=S, topology="degenerate", seed=S)
+
+
+@pytest.mark.parametrize("placement", ["jsq", "least_land", "round_robin"])
+def test_round_loop_parity_fabric(placement):
+    run_differential(S=3, topology="fabric", placement=placement)
+
+
+def test_round_loop_parity_threshold_fifo():
+    run_differential(S=3, policy="threshold", scheduler="fifo")
+
+
+@pytest.mark.parametrize("topology", ["degenerate", "fabric"])
+def test_round_loop_parity_churn(topology):
+    run_differential(S=3, topology=topology, churn=True, seed=5)
+
+
+def test_post_run_fleet_state_parity():
+    # after a full replay, the residual backlog state (rebuilt from the
+    # padded arrays by the jax engine's fold-back) matches the numpy one
+    from repro.serving.synthetic import synthetic_streams
+
+    imgs, labels = synthetic_streams(3, 48, seed=9)
+    states = {}
+    for backend in ("numpy", "jax"):
+        srv, _ = make_server(backend, S=3)
+        srv.process_streams(imgs, labels)
+        states[backend] = srv.fleet.state
+    assert_fleet_equal(states["numpy"], states["jax"])
+
+
+def test_server_backend_fail_fast():
+    # unsupported fabric configs must raise at construction, not mid-run
+    from repro.core.netsim import Uplink, mbps
+    from repro.net import EdgeFabric
+    from repro.serving import MultiStreamServer, ServeConfig
+    from repro.serving.synthetic import synthetic_tiers
+
+    fast, slow, cal = synthetic_tiers()
+    cfg = ServeConfig(resolutions=(4, 8), acc_server=(0.7, 0.99),
+                      frame_rate=32.0, deadline=0.2)
+    up = Uplink(bandwidth_bps=mbps(50.0), latency=0.05,
+                server_time=cfg.server_time, jitter=0.3, seed=0)
+    with pytest.raises(ValueError):
+        MultiStreamServer(cfg, fast, slow, cal, None, n_streams=2,
+                          fabric=EdgeFabric.degenerate(up, n_streams=2),
+                          backend="jax")
+
+
+# --------------------------------------------------------------------- #
+# golden snapshot: both backends pin tests/data/fabric_snapshot.json
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+@pytest.mark.parametrize("topology,S", [("degenerate", 4), ("fabric", 12)])
+def test_fabric_snapshot(backend, topology, S):
+    from repro.serving.synthetic import synthetic_streams
+
+    with open(os.path.join(DATA, "fabric_snapshot.json")) as f:
+        snap = json.load(f)[topology]
+    imgs, labels = synthetic_streams(S, 64)
+    srv, _ = make_server(backend, S=S, topology=topology)
+    agg = srv.process_streams(imgs, labels)
+    assert agg.accuracy == pytest.approx(snap["accuracy"], abs=1e-12)
+    assert int(agg.n_offloaded) == snap["n_offloaded"]
+    assert int(agg.n_deadline_miss) == snap["n_deadline_miss"]
+    for m, ref in zip(agg.per_stream, snap["per_stream"]):
+        assert m.n_frames == ref["n_frames"]
+        assert m.accuracy == pytest.approx(ref["accuracy"], abs=1e-12)
+        assert m.offload_frac == pytest.approx(ref["offload_frac"], abs=1e-12)
+        assert m.deadline_miss_frac == pytest.approx(ref["deadline_miss_frac"],
+                                                     abs=1e-12)
+
+
+# --------------------------------------------------------------------- #
+# sharding smoke: the streams axis under a local mesh
+# --------------------------------------------------------------------- #
+
+def test_engine_under_local_mesh():
+    from repro.launch.mesh import make_local_mesh
+    from repro.serving.synthetic import synthetic_streams
+    from repro.sharding.axes import sharding_ctx
+
+    imgs, labels = synthetic_streams(4, 32, seed=3)
+
+    def run():
+        srv, _ = make_server("jax", S=4)
+        return srv.process_streams(imgs, labels)
+
+    base = run()
+    with sharding_ctx(make_local_mesh()):
+        meshed = run()
+    assert meshed.n_frames == base.n_frames
+    assert meshed.n_offloaded == base.n_offloaded
+    assert meshed.n_deadline_miss == base.n_deadline_miss
+    assert meshed.accuracy == base.accuracy

@@ -1,0 +1,216 @@
+"""Property tests for ``FleetState``'s segment ops against a per-stream
+Python-list reference model.
+
+``FleetState`` vectorizes what ``BacklogPolicy`` does with plain lists
+(append, trim to the newest ``max_backlog``, prune expired, consume planned
+offloads, clear retired streams) as flat struct-of-arrays segment ops.  The
+reference model here IS those lists; every op sequence must leave both
+representations identical, and the flat invariants (offsets = cumsum of
+lengths, ``stream_id`` grouped ascending) must hold after every op.
+
+Runs as hypothesis properties when hypothesis is installed (dev-only dep,
+see ``tests/_hypothesis_compat.py``) and as plain seeded fuzz otherwise.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+
+
+# --------------------------------------------------------------------- #
+# reference model: one Python list per stream
+# --------------------------------------------------------------------- #
+
+class RefFleet:
+    def __init__(self, n_streams, max_backlog):
+        self.n = n_streams
+        self.mb = list(max_backlog)
+        self.streams = [[] for _ in range(n_streams)]
+
+    def extend(self, stream, arrival, conf):
+        for s, a, c in zip(stream, arrival, conf):
+            self.streams[int(s)].append((float(a), float(c)))
+        for s in range(self.n):
+            if self.mb[s] is not None and len(self.streams[s]) > self.mb[s]:
+                # NB not seg[-mb:]: Python's [-0:] keeps everything
+                self.streams[s] = self.streams[s][len(self.streams[s]) - self.mb[s]:]
+
+    def prune_expired(self, now, deadline, mask):
+        for s in range(self.n):
+            if mask[s]:
+                self.streams[s] = [f for f in self.streams[s]
+                                   if f[0] + deadline > now[s]]
+
+    def clear(self, mask):
+        for s in range(self.n):
+            if mask[s]:
+                self.streams[s] = []
+
+    def consume(self, off_stream, off_pos, clear_streams):
+        drop = {}
+        for s, p in zip(off_stream, off_pos):
+            drop.setdefault(int(s), set()).add(int(p))
+        for s in range(self.n):
+            if clear_streams[s]:
+                self.streams[s] = []
+            elif s in drop:
+                self.streams[s] = [f for p, f in enumerate(self.streams[s])
+                                   if p not in drop[s]]
+
+    def filter(self, keep):
+        i = 0
+        for s in range(self.n):
+            seg = self.streams[s]
+            self.streams[s] = [f for j, f in enumerate(seg) if keep[i + j]]
+            i += len(seg)
+
+    def flat(self):
+        arr, conf, sid = [], [], []
+        for s in range(self.n):
+            for a, c in self.streams[s]:
+                arr.append(a)
+                conf.append(c)
+                sid.append(s)
+        return np.asarray(arr), np.asarray(conf), np.asarray(sid, dtype=np.int64)
+
+
+def check(state, ref):
+    arr, conf, sid = ref.flat()
+    assert len(state) == len(arr)
+    assert np.array_equal(state.stream_id, sid)
+    assert np.array_equal(state.arrival, arr)
+    assert np.array_equal(state.conf, conf)
+    # flat invariants
+    lens = np.asarray([len(s) for s in ref.streams])
+    assert np.array_equal(state.lengths, lens)
+    assert state.offsets[0] == 0 and state.offsets[-1] == len(state)
+    assert np.array_equal(state.offsets, np.r_[0, np.cumsum(lens)])
+    assert np.array_equal(state.stream_id,
+                          np.repeat(np.arange(state.n_streams), lens))
+
+
+# --------------------------------------------------------------------- #
+# the op-sequence driver (shared by hypothesis and seeded fuzz)
+# --------------------------------------------------------------------- #
+
+def run_ops(seed, n_streams=5, n_ops=40, deadline=0.2):
+    from repro.policy.fleet import FleetState
+
+    rng = np.random.default_rng(seed)
+    mb = [None, 1, 2, 3, 8][:n_streams]
+    rng.shuffle(mb)
+    state = FleetState(n_streams, max_backlog=mb)
+    ref = RefFleet(n_streams, mb)
+    t = 0.0
+    for _ in range(n_ops):
+        op = rng.integers(0, 5)
+        if op == 0:  # extend: arbitrary interleaving, per-stream order kept
+            k = int(rng.integers(0, 8))
+            stream = rng.integers(0, n_streams, size=k)
+            arrival = t + rng.integers(0, 16, size=k) / 32.0
+            conf = rng.uniform(0.0, 1.0, size=k)
+            state.extend(stream, arrival, conf)
+            ref.extend(stream, arrival, conf)
+            t += 0.25
+        elif op == 1:  # prune_expired on a random stream mask
+            now = t + rng.integers(-8, 8, size=n_streams) / 32.0
+            mask = rng.random(n_streams) < 0.7
+            state.prune_expired(now, deadline, mask)
+            ref.prune_expired(now, deadline, mask)
+        elif op == 2:  # clear retired streams
+            mask = rng.random(n_streams) < 0.3
+            state.clear(mask)
+            ref.clear(mask)
+        elif op == 3:  # consume planned offloads + one-shot clears
+            lens = state.lengths
+            off_s, off_p = [], []
+            for s in range(n_streams):
+                if lens[s] and rng.random() < 0.6:
+                    npos = int(rng.integers(1, lens[s] + 1))
+                    for p in sorted(rng.choice(lens[s], size=npos, replace=False)):
+                        off_s.append(s)
+                        off_p.append(int(p))
+            clear = rng.random(n_streams) < 0.2
+            removed = state.consume(np.asarray(off_s, dtype=np.int64),
+                                    np.asarray(off_p, dtype=np.int64), clear)
+            before = sum(len(s) for s in ref.streams)
+            ref.consume(off_s, off_p, clear)
+            assert removed == before - sum(len(s) for s in ref.streams)
+        else:  # raw filter with an arbitrary keep mask
+            keep = rng.random(len(state)) < 0.8
+            state.filter(keep)
+            ref.filter(keep)
+        check(state, ref)
+
+
+@given(st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=50, deadline=None)
+def test_segment_ops_match_reference_hypothesis(seed):
+    run_ops(seed)
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_segment_ops_match_reference(seed):
+    run_ops(seed * 7919 + 13)
+
+
+# --------------------------------------------------------------------- #
+# targeted edge cases
+# --------------------------------------------------------------------- #
+
+def test_extend_trims_to_newest():
+    from repro.policy.fleet import FleetState
+
+    state = FleetState(1, max_backlog=3)
+    arr = np.arange(7) / 32.0
+    state.extend(np.zeros(7, dtype=np.int64), arr, arr)
+    assert np.array_equal(state.arrival, arr[-3:])  # newest survive
+
+
+def test_extend_unbounded_never_trims():
+    from repro.policy.fleet import FleetState
+
+    state = FleetState(2, max_backlog=[None, 2])
+    arr = np.arange(10) / 32.0
+    state.extend(np.repeat([0, 1], 5), np.r_[arr[:5], arr[5:]], arr)
+    assert np.array_equal(state.lengths, [5, 2])
+
+
+def test_extend_interleaved_keeps_per_stream_order():
+    from repro.policy.fleet import FleetState
+
+    state = FleetState(2, max_backlog=8)
+    # frames for the two streams interleaved in one call: the regroup is
+    # stable, so each stream keeps its own relative order
+    state.extend(np.asarray([1, 0, 1, 0]), np.asarray([0.1, 0.2, 0.3, 0.4]),
+                 np.asarray([1.0, 2.0, 3.0, 4.0]))
+    assert np.array_equal(state.arrival, [0.2, 0.4, 0.1, 0.3])
+    assert np.array_equal(state.conf, [2.0, 4.0, 1.0, 3.0])
+
+
+def test_prune_boundary_is_strict():
+    from repro.policy.fleet import FleetState
+
+    # the compare is ``arrival + deadline > now``: a frame exactly AT its
+    # deadline is expired (matches BacklogPolicy.plan's prune)
+    state = FleetState(1, max_backlog=8)
+    state.extend(np.zeros(2, dtype=np.int64), np.asarray([0.0, 0.0625]),
+                 np.asarray([0.5, 0.5]))
+    state.prune_expired(np.asarray([0.2]), 0.2, np.ones(1, dtype=bool))
+    assert np.array_equal(state.arrival, [0.0625])
+
+
+def test_consume_positions_are_pre_plan():
+    from repro.policy.fleet import FleetState
+
+    state = FleetState(2, max_backlog=8)
+    state.extend(np.asarray([0, 0, 0, 1, 1]), np.arange(5) / 32.0,
+                 np.arange(5, dtype=float))
+    # positions index the backlog as of planning time, per stream
+    n = state.consume(np.asarray([0, 0, 1]), np.asarray([0, 2, 1]),
+                      np.zeros(2, dtype=bool))
+    assert n == 3
+    assert np.array_equal(state.conf, [1.0, 3.0])
+    assert np.array_equal(state.lengths, [1, 1])

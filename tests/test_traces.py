@@ -1,0 +1,140 @@
+"""Coverage for ``net/traces.py``: validation, searchsorted replay
+boundaries, loop wraparound, and seeded-generator determinism."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core.netsim import mbps
+from repro.net.traces import (BandwidthTrace, lte_trace, regime_shift_trace,
+                              wifi_trace)
+
+
+# --------------------------------------------------------------------- #
+# constructor validation
+# --------------------------------------------------------------------- #
+
+def test_rejects_nonzero_start():
+    with pytest.raises(ValueError, match="start at 0.0"):
+        BandwidthTrace(t=np.asarray([1.0, 2.0]), bps=np.asarray([1e6, 2e6]))
+
+
+def test_rejects_zero_duration_segment():
+    with pytest.raises(ValueError, match="ascending"):
+        BandwidthTrace(t=np.asarray([0.0, 1.0, 1.0]),
+                       bps=np.asarray([1e6, 2e6, 3e6]))
+
+
+def test_rejects_negative_duration_segment():
+    with pytest.raises(ValueError, match="ascending"):
+        BandwidthTrace(t=np.asarray([0.0, 2.0, 1.0]),
+                       bps=np.asarray([1e6, 2e6, 3e6]))
+
+
+def test_rejects_nonpositive_bandwidth():
+    with pytest.raises(ValueError, match="positive"):
+        BandwidthTrace(t=np.asarray([0.0, 1.0]), bps=np.asarray([1e6, 0.0]))
+    with pytest.raises(ValueError, match="positive"):
+        BandwidthTrace(t=np.asarray([0.0, 1.0]), bps=np.asarray([1e6, -5.0]))
+
+
+def test_rejects_shape_mismatch():
+    with pytest.raises(ValueError, match="matching"):
+        BandwidthTrace(t=np.asarray([0.0, 1.0]), bps=np.asarray([1e6]))
+    with pytest.raises(ValueError, match="matching"):
+        BandwidthTrace(t=np.zeros(0), bps=np.zeros(0))
+
+
+def test_rejects_loop_duration_short_of_last_breakpoint():
+    with pytest.raises(ValueError, match="cover every breakpoint"):
+        BandwidthTrace(t=np.asarray([0.0, 5.0]), bps=np.asarray([1e6, 2e6]),
+                       loop=True, duration=4.0)
+
+
+def test_default_duration_is_last_plus_median_gap():
+    tr = BandwidthTrace(t=np.asarray([0.0, 1.0, 2.0]),
+                        bps=np.asarray([1e6, 2e6, 3e6]))
+    assert tr.duration == pytest.approx(3.0)
+    # single-segment trace: falls back to a 1 s period
+    assert BandwidthTrace(t=np.zeros(1), bps=np.ones(1)).duration == pytest.approx(1.0)
+
+
+# --------------------------------------------------------------------- #
+# searchsorted replay: boundary and wraparound semantics
+# --------------------------------------------------------------------- #
+
+def test_breakpoint_boundaries():
+    tr = BandwidthTrace(t=np.asarray([0.0, 1.0, 3.0]),
+                        bps=np.asarray([10.0, 20.0, 30.0]))
+    # exactly AT a breakpoint the new segment's rate is in effect
+    # (side="right": bps[i] rules [t[i], t[i+1]))
+    np.testing.assert_array_equal(
+        tr.bandwidth_at([0.0, 1.0, 3.0]), [10.0, 20.0, 30.0])
+    # just below a breakpoint the previous segment still rules
+    np.testing.assert_array_equal(
+        tr.bandwidth_at([1.0 - 1e-9, 3.0 - 1e-9]), [10.0, 20.0])
+    # last segment holds forever when not looping
+    np.testing.assert_array_equal(tr.bandwidth_at([100.0]), [30.0])
+    # times before t=0 clamp to the first segment
+    np.testing.assert_array_equal(tr.bandwidth_at([-0.5]), [10.0])
+
+
+def test_loop_wraparound():
+    tr = BandwidthTrace(t=np.asarray([0.0, 1.0]), bps=np.asarray([10.0, 20.0]),
+                        loop=True, duration=2.0)
+    # t mod duration: 2.0 -> 0.0, 3.0 -> 1.0, 3.5 -> 1.5
+    np.testing.assert_array_equal(
+        tr.bandwidth_at([0.5, 1.5, 2.0, 3.0, 3.5, 4.0]),
+        [10.0, 20.0, 10.0, 20.0, 20.0, 10.0])
+
+
+def test_lookup_is_vectorized_and_shape_preserving():
+    tr = regime_shift_trace((20.0, 2.0), period=10.0)
+    ts = np.linspace(0.0, 60.0, 121).reshape(11, 11)
+    out = tr.bandwidth_at(ts)
+    assert out.shape == ts.shape
+    assert set(np.unique(out)) == {mbps(2.0), mbps(20.0)}
+
+
+def test_mean_bps_is_time_weighted():
+    tr = BandwidthTrace(t=np.asarray([0.0, 3.0]), bps=np.asarray([10.0, 40.0]),
+                        duration=4.0)
+    # 3 s at 10 + 1 s at 40 over a 4 s period
+    assert tr.mean_bps == pytest.approx((3 * 10 + 1 * 40) / 4)
+
+
+def test_from_mbps_converts_units():
+    tr = BandwidthTrace.from_mbps([0.0, 1.0], [8.0, 16.0])
+    np.testing.assert_allclose(tr.bps, [mbps(8.0), mbps(16.0)])
+
+
+# --------------------------------------------------------------------- #
+# generators: deterministic per seed, distinct across seeds
+# --------------------------------------------------------------------- #
+
+@pytest.mark.parametrize("gen,kw", [
+    (lte_trace, {"duration": 30.0, "seed": 3}),
+    (wifi_trace, {"duration": 30.0, "seed": 3}),
+])
+def test_generators_deterministic_per_seed(gen, kw):
+    a, b = gen(**kw), gen(**kw)
+    np.testing.assert_array_equal(a.t, b.t)
+    np.testing.assert_array_equal(a.bps, b.bps)
+    c = gen(**{**kw, "seed": 4})
+    assert not np.array_equal(a.bps, c.bps)
+
+
+def test_generators_emit_valid_looping_traces():
+    for tr, step in ((lte_trace(duration=20.0, step=1.0), 1.0),
+                     (wifi_trace(duration=20.0, step=0.5), 0.5)):
+        assert tr.loop and tr.t[0] == 0.0
+        assert (np.diff(tr.t) > 0).all() and (tr.bps > 0).all()
+        assert tr.duration == pytest.approx(tr.t[-1] + step)
+
+
+def test_regime_shift_square_wave():
+    tr = regime_shift_trace((20.0, 2.0), period=10.0)
+    np.testing.assert_array_equal(tr.bandwidth_at([0.0, 10.0, 20.0, 30.0]),
+                                  [mbps(20.0), mbps(2.0), mbps(20.0), mbps(2.0)])
+    with pytest.raises(ValueError, match="two levels"):
+        regime_shift_trace((20.0,))
