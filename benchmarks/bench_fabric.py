@@ -166,12 +166,10 @@ def run(args=None) -> dict:
     print("bench_fabric,monotone_offload_at_max_fleet="
           f"{out['monotone_offload_at_max_fleet']}", flush=True)
 
-    from benchmarks.common import out_path
+    from benchmarks.common import emit_bench_json
 
-    with open(out_path("fabric_sweep.json"), "w") as f:
-        json.dump(out, f, indent=2)
-    with open(out_path("BENCH_fabric.json"), "w") as f:  # machine-readable CI name
-        json.dump(out, f, indent=2)
+    # machine-readable CI name + legacy sweep filename
+    emit_bench_json("BENCH_fabric.json", out, mirror="fabric_sweep.json")
     return out
 
 

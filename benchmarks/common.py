@@ -172,3 +172,20 @@ def out_path(name: str) -> str:
     d = os.path.join(os.path.dirname(__file__), "..", "results", "bench")
     os.makedirs(d, exist_ok=True)
     return os.path.join(d, name)
+
+
+def emit_bench_json(name: str, payload: dict, *, mirror: str = None) -> str:
+    """Single emission point for benchmark artifacts under ``results/bench/``.
+
+    Every ``BENCH_*.json`` goes through here so the artifacts share one
+    serialization policy (indent=2, trailing newline, numpy scalars coerced
+    to plain floats).  ``mirror`` writes the same payload under a second
+    name — used by benches that keep a legacy filename alongside the
+    canonical ``BENCH_*`` one.  Returns the primary path.
+    """
+    path = out_path(name)
+    for p in (path,) + ((out_path(mirror),) if mirror else ()):
+        with open(p, "w") as f:
+            json.dump(payload, f, indent=2, default=float)
+            f.write("\n")
+    return path

@@ -108,6 +108,19 @@ class EdgeFabric:
         """Nominal T^o the planners/estimators assume."""
         return self.pool.nominal_server_time
 
+    def expected_server_time(self) -> float:
+        """Occupancy-calibrated T^o: with a continuous-batching pool this is
+        the amortized f(expected_batch)/expected_batch at the observed
+        occupancy EWMA; otherwise the nominal mean (bit-equal to
+        ``server_time``)."""
+        return self.pool.expected_server_time()
+
+    @property
+    def occupancy(self) -> float:
+        """Observed per-request batch-occupancy EWMA of the slow tier
+        (1.0 = serial regime / no batching)."""
+        return float(self.pool.avg_batch)
+
     @property
     def n_transfers(self) -> int:
         return int(sum(c.uplink.n_transfers for c in self.cells))
@@ -142,7 +155,9 @@ class EdgeFabric:
                 end_tx[rows] = cell.uplink.upload_batch(payloads[rows], subs[rows])
         replica = self.placement.assign(self.pool, end_tx)
         done = self.pool.process(end_tx, replica)
-        self.last_service_time = self.pool.server_time[replica]
+        # batched service reports the member's whole-batch f(n); without
+        # batching this is exactly server_time[replica] as before
+        self.last_service_time = self.pool.last_service
         return done + self.latency
 
     def reset(self):
@@ -182,11 +197,11 @@ class EdgeFabric:
               bandwidth_bps: float = 1e6, latency: float = 0.05,
               server_time: float = 0.037, placement: str = "round_robin",
               jitter: float = 0.0, seed: int = 0, traces=None,
-              serial_replicas: bool = True) -> "EdgeFabric":
+              serial_replicas: bool = True, batching=None) -> "EdgeFabric":
         """Convenience constructor for benchmarks/examples: C homogeneous
         cells (optionally each replaying its own bandwidth trace) in front
-        of K serial replicas.  Cell c gets seed ``seed + c`` so jittered
-        cells decorrelate."""
+        of K serial replicas (optionally continuous-batching ones).  Cell c
+        gets seed ``seed + c`` so jittered cells decorrelate."""
         traces = list(traces) if traces is not None else [None] * n_cells
         if len(traces) != n_cells:
             raise ValueError("need one trace (or None) per cell")
@@ -194,5 +209,6 @@ class EdgeFabric:
                       server_time=server_time, jitter=jitter, seed=seed + c,
                       trace=traces[c])
                for c in range(n_cells)]
-        pool = ReplicaPool(n_replicas, server_time, serial=serial_replicas)
+        pool = ReplicaPool(n_replicas, server_time, serial=serial_replicas,
+                           batching=batching)
         return cls(ups, pool, n_streams=n_streams, placement=placement)

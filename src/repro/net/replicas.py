@@ -14,6 +14,13 @@ replica, one recursion per replica, no per-request Python.
 (``done = arrive + server_time``, nothing queues): the degenerate edge
 fabric uses it so a 1-cell/1-replica fabric reproduces the legacy
 single-uplink metrics bit-for-bit.
+
+``batching=ContinuousBatching(...)`` upgrades each replica to a
+continuous-batching inference server (``repro.slowtier``): requests landing
+within an admission window share a batch whose cost is a latency curve
+f(batch) rather than per-request service times.  The *degenerate* batching
+config (``FlatService``, zero window, cap 1) routes back through the legacy
+serial recursion above and stays bit-for-bit with a batching-free pool.
 """
 from __future__ import annotations
 
@@ -25,7 +32,8 @@ __all__ = ["ReplicaPool"]
 class ReplicaPool:
     """K slow-tier replicas with per-replica queues and service times."""
 
-    def __init__(self, n_replicas: int, server_time, *, serial: bool = True):
+    def __init__(self, n_replicas: int, server_time, *, serial: bool = True,
+                 batching=None, batch_beta: float = 0.25):
         if n_replicas < 1:
             raise ValueError("need at least one replica")
         self.n_replicas = int(n_replicas)
@@ -35,6 +43,18 @@ class ReplicaPool:
             raise ValueError("server_time must be >= 0")
         self.server_time = st
         self.serial = bool(serial)
+        if batching is not None and not serial:
+            raise ValueError("batching implies serial replicas "
+                             "(batches run back-to-back on each replica)")
+        if not (0.0 < batch_beta <= 1.0):
+            raise ValueError(f"batch_beta must be in (0, 1], got {batch_beta}")
+        self.batching = batching
+        self.batch_beta = float(batch_beta)
+        # EWMA of observed per-request batch occupancy; 1.0 = serial regime
+        self.avg_batch = 1.0
+        # per-request service time of the most recent ``process`` batch (for
+        # batched service this is the member's whole-batch f(n))
+        self.last_service = np.zeros(0, dtype=np.float64)
         self.busy_until = np.zeros(self.n_replicas, dtype=np.float64)
         # contention accounting, per replica
         self.n_jobs = np.zeros(self.n_replicas, dtype=np.int64)
@@ -46,6 +66,24 @@ class ReplicaPool:
         """The scalar T^o planners/estimators assume (mean over replicas)."""
         return float(self.server_time.mean())
 
+    @property
+    def _batching_live(self) -> bool:
+        return self.batching is not None and not self.batching.degenerate
+
+    def expected_server_time(self) -> float:
+        """Occupancy-calibrated T^o: amortized per-request cost
+        f(expected_batch)/expected_batch under the configured latency curve
+        at the observed occupancy EWMA; the nominal mean without batching
+        (bit-equal to the pre-batching estimate)."""
+        if not self._batching_live:
+            return self.nominal_server_time
+        return float(self.batching.model.per_request(self.avg_batch))
+
+    def queue_depth(self, now: float) -> float:
+        """Mean pending work (seconds of busy-until beyond ``now``) across
+        replicas — the decision plane's congestion observable."""
+        return float(np.clip(self.busy_until - now, 0.0, None).mean())
+
     def process(self, t_arrive, replica) -> np.ndarray:
         """Serve one batch: each request lands on ``replica[i]`` when its
         upload finishes at ``t_arrive[i]``; returns service-completion
@@ -55,23 +93,29 @@ class ReplicaPool:
         batch order): within each replica the completion times follow
         ``done_i = max(arrive_i, done_{i-1}) + server_time`` — one Lindley
         recursion per replica over the batch, carried across batches by
-        ``busy_until``.
+        ``busy_until``.  With live (non-degenerate) ``batching``, requests
+        are instead grouped into admission-window batches and each batch
+        costs f(n) (``repro.slowtier.form_batches``).
         """
         t_arrive = np.asarray(t_arrive, dtype=np.float64)
         replica = np.asarray(replica, dtype=np.int64)
         if t_arrive.shape != replica.shape:
             raise ValueError("t_arrive and replica must have matching shapes")
         if len(t_arrive) == 0:
+            self.last_service = np.zeros(0, dtype=np.float64)
             return np.zeros(0, dtype=np.float64)
         if (replica < 0).any() or (replica >= self.n_replicas).any():
             raise ValueError("replica id out of range")
         st = self.server_time[replica]
+        if self._batching_live:
+            return self._process_batched(t_arrive, replica)
         if not self.serial:  # infinite-capacity fixed delay (paper semantics)
             done = t_arrive + st
             self.n_jobs += np.bincount(replica, minlength=self.n_replicas)
             self.busy_seconds += np.bincount(replica, weights=st,
                                              minlength=self.n_replicas)
             np.maximum.at(self.busy_until, replica, done)  # last-completion marker
+            self.last_service = st
             return done
         done = np.empty(len(t_arrive), dtype=np.float64)
         order = np.lexsort((np.arange(len(t_arrive)), t_arrive, replica))
@@ -94,6 +138,38 @@ class ReplicaPool:
         self.busy_seconds += np.bincount(r_s, weights=s_s, minlength=self.n_replicas)
         self.queued_seconds += np.bincount(
             r_s, weights=np.clip(starts - a_s, 0.0, None), minlength=self.n_replicas)
+        self.last_service = st
+        return done
+
+    def _process_batched(self, t_arrive, replica) -> np.ndarray:
+        """Continuous-batching service: group by replica (arrival order, ties
+        keep batch order — same lexsort as the serial path), run admission-
+        window batch formation per replica, fold occupancy into the EWMA."""
+        from repro.slowtier import form_batches
+
+        n = len(t_arrive)
+        done = np.empty(n, dtype=np.float64)
+        service = np.empty(n, dtype=np.float64)
+        bsize = np.empty(n, dtype=np.int64)
+        order = np.lexsort((np.arange(n), t_arrive, replica))
+        r_s, a_s = replica[order], t_arrive[order]
+        seg = np.r_[0, np.flatnonzero(np.diff(r_s)) + 1]
+        for a, b in zip(seg, np.r_[seg[1:], len(r_s)]):
+            k = int(r_s[a])
+            d, f, nb, bid = form_batches(a_s[a:b], self.batching,
+                                         busy0=self.busy_until[k])
+            done[order[a:b]] = d
+            service[order[a:b]] = f
+            bsize[order[a:b]] = nb
+            self.busy_until[k] = d[-1]  # last batch's completion
+            first = np.r_[True, bid[1:] != bid[:-1]]  # one row per batch
+            self.busy_seconds[k] += float(f[first].sum())
+            self.queued_seconds[k] += float(((d - f) - a_s[a:b]).sum())
+        self.n_jobs += np.bincount(replica, minlength=self.n_replicas)
+        self.last_service = service
+        obs = float(bsize.mean())  # per-request mean occupancy this round
+        self.avg_batch = (1.0 - self.batch_beta) * self.avg_batch \
+            + self.batch_beta * obs
         return done
 
     def utilization(self, horizon: float) -> np.ndarray:
@@ -107,3 +183,5 @@ class ReplicaPool:
         self.n_jobs[:] = 0
         self.busy_seconds[:] = 0.0
         self.queued_seconds[:] = 0.0
+        self.avg_batch = 1.0
+        self.last_service = np.zeros(0, dtype=np.float64)

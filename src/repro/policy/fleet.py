@@ -276,6 +276,12 @@ class FleetRunner:
         self.deadline = float(deadline)
         self.latency = float(latency)
         self.server_time = float(server_time)
+        # slow-tier congestion observables, refreshed each round by the
+        # serving engine when the pool batches (see EnvBatch docs); the
+        # engine also refreshes ``server_time`` with the calibrated
+        # amortized estimate — identical to the nominal without batching
+        self.occupancy = 1.0
+        self.queue_depth = 0.0
         self.sizes = payload_sizes(size_of, np.asarray(self.resolutions))
         self.bw_alpha = float(bw_alpha)
         # under an edge fabric, ``bw_init`` is the (S,) per-cell prior and
@@ -315,7 +321,8 @@ class FleetRunner:
         return EnvBatch(bandwidth=np.maximum(self.bw_est, 1.0), latency=self.latency,
                         server_time=self.server_time, deadline=self.deadline,
                         acc_server=self.acc_server, sizes=self.sizes,
-                        cell_id=self.state.cell_id)
+                        cell_id=self.state.cell_id,
+                        occupancy=self.occupancy, queue_depth=self.queue_depth)
 
     def env(self, s: int) -> Env:
         return self.env_batch().for_stream(s)
@@ -360,10 +367,16 @@ class FleetRunner:
 
         spec, planner = self._jax_planner
         fleet = fleet_from_state(self.state, spec.L, dtype=spec.dtype)
+        # occupancy-aware T^o: pass the calibrated estimate as a traced
+        # scalar only when it deviates from the spec's static nominal, so
+        # batching-free runs keep the original (bit-pinned) compiled graph
+        st = (None if float(self.server_time) == spec.server_time
+              else jnp.asarray(self.server_time, dtype=spec.dtype))
         out = planner(fleet,
                       jnp.asarray(np.where(np.isfinite(now), now, np.inf),
                                   dtype=spec.dtype),
-                      jnp.asarray(np.maximum(self.bw_est, 1.0), dtype=spec.dtype))
+                      jnp.asarray(np.maximum(self.bw_est, 1.0), dtype=spec.dtype),
+                      st)
         batch = plan_batch_from_out(out, self.n_streams, len(self.acc_server))
         if not active.all():  # inactive streams keep PlanBatch.empty rows
             batch.theta[~active] = 0.0

@@ -52,7 +52,7 @@ __all__ = [
 _EPS = 1e-12  # same dominance epsilon as policy/frontier.py
 
 #: policy registry names the JAX planner supports (homogeneous fleets)
-JAX_PLANNABLE = ("cbo", "threshold", "local", "server")
+JAX_PLANNABLE = ("cbo", "threshold", "local", "server", "greedy-rate")
 
 
 # --------------------------------------------------------------------------- #
@@ -185,17 +185,18 @@ def clear_fleet(fleet: PaddedFleet, mask) -> PaddedFleet:
 class PlannerSpec:
     """Static planner configuration — everything jit specializes on."""
 
-    kind: str  # "cbo" | "threshold" | "local" | "server"
+    kind: str  # "cbo" | "threshold" | "local" | "server" | "greedy-rate"
     sizes: tuple  # (m,) payload bytes per resolution
     acc_server: tuple  # (m,)
     deadline: float
     latency: float
-    server_time: float
+    server_time: float  # nominal T^o; plan_fleet can override per call
     L: int  # backlog pad (== max_backlog on the jax path)
     F: int = 0  # CBO frontier cap; 0 -> 1 + L*m
     theta: float = 0.5  # threshold policy
     resolution: int = -1  # threshold policy (index, -1 = highest)
     frame_interval: float = 1.0 / 30.0  # server policy
+    local_acc: float = 0.5  # greedy-rate policy
     dtype: object = jnp.float32
 
     @property
@@ -248,18 +249,22 @@ def _summarize(dec, conf, length, gain, spec: PlannerSpec):
     return theta, r0, n_off, gain, base
 
 
-def _plan_local_single(arr, conf, length, now, bw, spec: PlannerSpec):
+def _plan_local_single(arr, conf, length, now, bw, st, spec: PlannerSpec):
     dec = jnp.full((spec.L,), -1, dtype=jnp.int8)
     return dec, jnp.asarray(0.0, dtype=arr.dtype), jnp.asarray(False), jnp.asarray(False)
 
 
-def _plan_server_single(arr, conf, length, now, bw, spec: PlannerSpec):
+def _plan_server_single(arr, conf, length, now, bw, st, spec: PlannerSpec):
     """ServerPolicy.plan_many: highest resolution sustainable within both
     the frame interval and the deadline budget; offload every frame."""
     L, m = spec.L, spec.m
     sizes = jnp.asarray(spec.sizes, dtype=arr.dtype)
     acc = jnp.asarray(spec.acc_server, dtype=arr.dtype)
-    tx_budget = min(spec.frame_interval, spec.deadline - spec.server_time - spec.latency)
+    if isinstance(st, float):  # static T^o: Python-float math, as before
+        tx_budget = min(spec.frame_interval, spec.deadline - st - spec.latency)
+    else:  # occupancy-calibrated T^o traced per round
+        tx_budget = jnp.minimum(spec.frame_interval,
+                                spec.deadline - st - spec.latency)
     feas = sizes / jnp.maximum(bw, 1e-9) <= tx_budget  # (m,)
     has_res = feas.any()
     r_s = (m - 1) - jnp.argmax(feas[::-1]).astype(jnp.int32)
@@ -270,11 +275,12 @@ def _plan_server_single(arr, conf, length, now, bw, spec: PlannerSpec):
     return dec, gain, jnp.asarray(False), jnp.asarray(False)
 
 
-def _plan_threshold_single(arr, conf, length, now, bw, spec: PlannerSpec):
+def _plan_threshold_single(arr, conf, length, now, bw, st, spec: PlannerSpec):
     """ThresholdPolicy.plan_many: serial acceptance in backlog order at a
     fixed resolution — same max-plus accumulation, same order."""
     L, m = spec.L, spec.m
     r = spec.resolution % m
+    rtt = st + spec.latency
     tx = jnp.asarray(spec.sizes[r], dtype=arr.dtype) / bw
     dacc = jnp.asarray(spec.acc_server[r], dtype=arr.dtype) - conf  # (L,)
     valid = jnp.arange(L) < length
@@ -283,7 +289,7 @@ def _plan_threshold_single(arr, conf, length, now, bw, spec: PlannerSpec):
         t, gain, dec = carry
         cand = valid[d] & (conf[d] < spec.theta)
         t_new = jnp.maximum(t, arr[d]) + tx
-        ok = cand & (t_new + spec.rtt <= arr[d] + spec.deadline)
+        ok = cand & (t_new + rtt <= arr[d] + spec.deadline)
         t = jnp.where(ok, t_new, t)
         gain = jnp.where(ok, gain + dacc[d], gain)
         dec = dec.at[d].set(jnp.where(ok, jnp.int8(r), jnp.int8(-1)))
@@ -296,7 +302,7 @@ def _plan_threshold_single(arr, conf, length, now, bw, spec: PlannerSpec):
     return dec, gain, jnp.asarray(False), jnp.asarray(False)
 
 
-def _plan_cbo_single(arr, conf, length, now, bw, spec: PlannerSpec):
+def _plan_cbo_single(arr, conf, length, now, bw, st, spec: PlannerSpec):
     """``cbo_plan`` (paper Algorithm 1) with a capped fixed-shape frontier.
 
     Semantics notes vs ``frontier.py``:
@@ -321,10 +327,11 @@ def _plan_cbo_single(arr, conf, length, now, bw, spec: PlannerSpec):
     """
     L, m, F = spec.L, spec.m, spec.frontier
     dt = arr.dtype
+    rtt = st + spec.latency
     sizes = jnp.asarray(spec.sizes, dtype=dt)
     acc = jnp.asarray(spec.acc_server, dtype=dt)
     tx = sizes / bw  # (m,)
-    static_t = tx <= spec.deadline - spec.rtt  # (m,)
+    static_t = tx <= spec.deadline - rtt  # (m,)
     valid = jnp.arange(L) < length
     # confidence-descending stable order, invalid slots last
     order = jnp.argsort(-jnp.where(valid, conf, -jnp.inf))
@@ -345,7 +352,7 @@ def _plan_cbo_single(arr, conf, length, now, bw, spec: PlannerSpec):
         t_exp = start[:, None] + tx[None, :]  # (F, m)
         g_exp = f_gain[:, None] + (acc - conf_j)[None, :]
         ok_exp = (f_valid[:, None] & feas_j[None, :]
-                  & (t_exp + spec.rtt <= arr_j + spec.deadline))
+                  & (t_exp + rtt <= arr_j + spec.deadline))
         cand_t = jnp.concatenate([f_t, t_exp.reshape(-1)])
         cand_g = jnp.concatenate([f_gain, g_exp.reshape(-1)])
         cand_ok = jnp.concatenate([f_valid, ok_exp.reshape(-1)])
@@ -387,24 +394,75 @@ def _plan_cbo_single(arr, conf, length, now, bw, spec: PlannerSpec):
     return f_dec[best], gain, overflow, inexact
 
 
+def _plan_greedy_rate_single(arr, conf, length, now, bw, st, spec: PlannerSpec):
+    """GreedyRatePolicy._plan: per frame in backlog order, walk resolutions
+    from the highest down, stop at the first whose server accuracy no longer
+    beats the local tier, offload at the first that also meets the deadline;
+    the uplink finish time carries serially across frames (max-plus)."""
+    L, m = spec.L, spec.m
+    dt = arr.dtype
+    rtt = st + spec.latency
+    # candidate resolutions: the descending prefix from m-1 down to (but
+    # excluding) the first r with acc_server[r] <= local_acc — static, the
+    # reference's inner break depends only on config
+    cand = []
+    for r in range(m - 1, -1, -1):
+        if spec.acc_server[r] <= spec.local_acc:
+            break
+        cand.append(r)
+    if not cand:
+        dec = jnp.full((L,), -1, dtype=jnp.int8)
+        return dec, jnp.asarray(0.0, dtype=dt), jnp.asarray(False), jnp.asarray(False)
+    cand_idx = jnp.asarray(cand, dtype=jnp.int32)  # descending r
+    sizes = jnp.asarray(spec.sizes, dtype=dt)
+    acc = jnp.asarray(spec.acc_server, dtype=dt)
+    tx = sizes[cand_idx] / bw  # (n_cand,)
+    valid = jnp.arange(L) < length
+
+    def body(d, carry):
+        t, gain, dec = carry
+        t_new = jnp.maximum(t, arr[d]) + tx  # (n_cand,) — t untouched until pick
+        ok = t_new + rtt <= arr[d] + spec.deadline
+        pick = jnp.argmax(ok)  # first feasible candidate = highest feasible r
+        has = ok.any() & valid[d]
+        r_sel = cand_idx[pick]
+        t = jnp.where(has, t_new[pick], t)
+        gain = jnp.where(has, gain + acc[r_sel] - conf[d], gain)
+        dec = dec.at[d].set(jnp.where(has, r_sel.astype(jnp.int8), jnp.int8(-1)))
+        return t, gain, dec
+
+    _, gain, dec = jax.lax.fori_loop(
+        0, L, body, (now.astype(dt), jnp.asarray(0.0, dtype=dt),
+                     jnp.full((L,), -1, dtype=jnp.int8)))
+    return dec, gain, jnp.asarray(False), jnp.asarray(False)
+
+
 _PLANNERS = {
     "cbo": _plan_cbo_single,
     "threshold": _plan_threshold_single,
     "local": _plan_local_single,
     "server": _plan_server_single,
+    "greedy-rate": _plan_greedy_rate_single,
 }
 
 
-def plan_fleet(spec: PlannerSpec, fleet: PaddedFleet, now, bw) -> PlanOut:
+def plan_fleet(spec: PlannerSpec, fleet: PaddedFleet, now, bw,
+               server_time=None) -> PlanOut:
     """One planning pass over every stream, vmapped single-stream planners.
 
     ``bw`` must already carry the 1 byte/s floor (``FleetRunner.env_batch``
     applies it); ``now`` is each stream's first valid arrival this round.
+    ``server_time`` overrides the spec's static nominal T^o with a traced
+    scalar (the occupancy-calibrated estimate under a batching slow tier);
+    ``None`` keeps the original static-constant compiled graph.
     """
     single = _PLANNERS[spec.kind]
+    st = spec.server_time if server_time is None \
+        else jnp.asarray(server_time, dtype=spec.dtype)
 
     def one(arr, conf, length, now_s, bw_s):
-        dec, gain, overflow, inexact = single(arr, conf, length, now_s, bw_s, spec)
+        dec, gain, overflow, inexact = single(arr, conf, length, now_s, bw_s,
+                                              st, spec)
         theta, r0, n_off, gain, base = _summarize(dec, conf, length, gain, spec)
         return dec, theta, r0, n_off, gain, base, overflow, inexact
 
@@ -416,8 +474,11 @@ def plan_fleet(spec: PlannerSpec, fleet: PaddedFleet, now, bw) -> PlanOut:
 
 
 def make_planner(spec: PlannerSpec):
-    """jit-compiled ``plan_fleet`` closed over the static spec."""
-    return jax.jit(lambda fleet, now, bw: plan_fleet(spec, fleet, now, bw))
+    """jit-compiled ``plan_fleet`` closed over the static spec.  The
+    optional 4th arg is a traced ``server_time`` override (pass ``None``
+    for the static spec constant; each choice compiles once)."""
+    return jax.jit(lambda fleet, now, bw, server_time=None:
+                   plan_fleet(spec, fleet, now, bw, server_time))
 
 
 def spec_for_policy(policy, *, sizes, acc_server, deadline, latency,
@@ -427,8 +488,8 @@ def spec_for_policy(policy, *, sizes, acc_server, deadline, latency,
     Raises for policies the JAX path does not support — the numpy path is
     always available for those.
     """
-    from repro.policy.policies import (CBOPolicy, LocalPolicy, ServerPolicy,
-                                       ThresholdPolicy)
+    from repro.policy.policies import (CBOPolicy, GreedyRatePolicy, LocalPolicy,
+                                       ServerPolicy, ThresholdPolicy)
 
     mb = getattr(policy, "max_backlog", None)
     if mb is None:
@@ -445,6 +506,9 @@ def spec_for_policy(policy, *, sizes, acc_server, deadline, latency,
                            resolution=policy.resolution, **common)
     if isinstance(policy, ServerPolicy):
         return PlannerSpec(kind="server", frame_interval=policy.frame_interval,
+                           **common)
+    if isinstance(policy, GreedyRatePolicy):
+        return PlannerSpec(kind="greedy-rate", local_acc=policy.local_acc,
                            **common)
     if isinstance(policy, LocalPolicy):
         return PlannerSpec(kind="local", **common)

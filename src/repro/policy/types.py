@@ -63,6 +63,12 @@ class EnvBatch:
     its transfers serialize), so ``plan_many`` automatically plans against
     the stream's cell.  ``cell_id`` carries the partition for policies
     that want topology awareness; ``None`` means the single-uplink world.
+
+    With a continuous-batching slow tier, ``server_time`` is already the
+    *calibrated* amortized estimate f(expected_batch)/expected_batch;
+    ``occupancy`` (the batch-occupancy EWMA behind it) and ``queue_depth``
+    (mean seconds of pending replica work) are the raw observables for
+    policies that want to reason about congestion directly.
     """
 
     bandwidth: np.ndarray  # (S,) uplink bytes/s, floored at 1.0
@@ -72,6 +78,8 @@ class EnvBatch:
     acc_server: tuple[float, ...]
     sizes: np.ndarray  # (m,) payload bytes per resolution
     cell_id: Optional[np.ndarray] = None  # (S,) int cell per stream; None = one cell
+    occupancy: float = 1.0  # slow-tier batch-occupancy EWMA (1.0 = serial)
+    queue_depth: float = 0.0  # mean pending replica work (s) at plan time
 
     @property
     def n_streams(self) -> int:
@@ -90,7 +98,8 @@ class EnvBatch:
         return EnvBatch(bandwidth=self.bandwidth[streams], latency=self.latency,
                         server_time=self.server_time, deadline=self.deadline,
                         acc_server=self.acc_server, sizes=self.sizes,
-                        cell_id=None if self.cell_id is None else self.cell_id[streams])
+                        cell_id=None if self.cell_id is None else self.cell_id[streams],
+                        occupancy=self.occupancy, queue_depth=self.queue_depth)
 
 
 @dataclass

@@ -285,8 +285,16 @@ class MultiStreamServer:
             conf = np.asarray(cf).reshape(S, b)
             t_ready = arr + t_fast  # (S, b); +inf on invalid slots
 
-            # control plane: one batched plan over every active backlog
+            # control plane: one batched plan over every active backlog,
+            # against the slow tier's occupancy-calibrated service estimate
+            # (identical to the nominal when the pool doesn't batch)
             now = np.min(arr, axis=1)  # first valid arrival (inf if none)
+            pool = self.fabric.pool
+            self.fleet.server_time = self.fabric.expected_server_time()
+            self.fleet.occupancy = float(pool.avg_batch)
+            fin = now[np.isfinite(now)]
+            self.fleet.queue_depth = pool.queue_depth(
+                float(fin.min()) if len(fin) else 0.0)
             batch = self.fleet.plan_all(now, active)
             theta = batch.theta
             cap = np.where(active, np.maximum(batch.n_offloads, 1), 0)
@@ -449,6 +457,7 @@ class MultiStreamServer:
         pool.n_jobs += np.asarray(carry.rep_n, dtype=np.int64)
         pool.busy_seconds += np.asarray(carry.rep_busy_s, dtype=np.float64)
         pool.queued_seconds += np.asarray(carry.rep_queued_s, dtype=np.float64)
+        pool.avg_batch = float(carry.avg_batch)  # occupancy EWMA (1.0 = serial)
         self.fabric.placement._next = int(carry.rr_next)
         self.fleet.bw_est[:] = np.asarray(carry.bw_est, dtype=np.float64)
         from repro.policy.fleet_jax import unpad_fleet

@@ -73,6 +73,14 @@ class EngineSpec:
     t_fast: float = 0.028  # fast_time + calib_time
     bw_alpha: float = 0.3
     collect: str = "metrics"  # none | metrics | trace
+    # continuous-batching slow tier (repro.slowtier); "none" = per-request
+    # service exactly as before.  coeffs: flat=(st,); linear=(base, per_item);
+    # step=(base, per_page, page_size)
+    batch_kind: str = "none"  # none | flat | linear | step
+    batch_coeffs: tuple = ()
+    batch_window: float = 0.0  # admission window (s)
+    batch_cap: int = 0  # occupancy cap per batch; 0 = unbounded
+    batch_beta: float = 0.25  # occupancy EWMA fold
 
     @property
     def m(self) -> int:
@@ -125,6 +133,7 @@ class EngineCarry(NamedTuple):
     offloaded: jnp.ndarray  # (S,) int32
     missed: jnp.ndarray  # (S,) int32
     correct: jnp.ndarray  # (S,) int32
+    avg_batch: jnp.ndarray  # () slow-tier occupancy EWMA (1.0 = serial)
 
 
 class RoundTrace(NamedTuple):
@@ -155,12 +164,16 @@ def init_carry(spec: EngineSpec, params: EngineParams) -> EngineCarry:
     z = lambda *s: jnp.zeros(s, dtype=dt)
     zi = lambda *s: jnp.zeros(s, dtype=jnp.int32)
     fleet = PaddedFleet(z(S, L), z(S, L), zi(S))
+    # copy=True: same-dtype astype would alias params.bw_init's buffer, and
+    # the engine donates its carry (make_engine) — an aliased buffer would
+    # be deleted out from under params on the first step
     return EngineCarry(
-        fleet=fleet, bw_est=params.bw_init.astype(dt),
+        fleet=fleet, bw_est=jnp.array(params.bw_init, dtype=dt, copy=True),
         cell_busy=z(C), cell_n=zi(C), cell_busy_s=z(C), cell_queued_s=z(C),
         rep_busy=z(K), rep_n=zi(K), rep_busy_s=z(K), rep_queued_s=z(K),
         rr_next=jnp.zeros((), jnp.int32),
-        frames=zi(S), offloaded=zi(S), missed=zi(S), correct=zi(S))
+        frames=zi(S), offloaded=zi(S), missed=zi(S), correct=zi(S),
+        avg_batch=jnp.ones((), dtype=dt))
 
 
 # --------------------------------------------------------------------------- #
@@ -193,6 +206,19 @@ def _lexsort2(primary, rows_sorted_by_secondary):
     return o[jnp.argsort(primary[o])]
 
 
+def _batch_latency(spec: EngineSpec, n):
+    """The slow tier's latency curve f(n) from the flat static coefficients
+    (mirrors ``repro.slowtier``'s LatencyModel classes in jnp)."""
+    c = spec.batch_coeffs
+    if spec.batch_kind == "flat":
+        return c[0] * n
+    if spec.batch_kind == "linear":
+        return c[0] + c[1] * n
+    if spec.batch_kind == "step":
+        return c[0] + c[1] * jnp.ceil(n / c[2])
+    raise ValueError(f"unknown batch_kind {spec.batch_kind!r}")
+
+
 # --------------------------------------------------------------------------- #
 # the round step
 # --------------------------------------------------------------------------- #
@@ -220,7 +246,14 @@ def _round_step(spec: EngineSpec, params: EngineParams,
                         shard(fleet.conf, "streams", None),
                         shard(fleet.length, "streams"))
     bw_plan = jnp.maximum(carry.bw_est, 1.0)  # same dead-link floor
-    plan = plan_fleet(spec.planner, fleet, now, bw_plan)
+    if spec.batch_kind == "none":
+        plan = plan_fleet(spec.planner, fleet, now, bw_plan)
+    else:
+        # occupancy-calibrated T^o = f(expected_batch)/expected_batch at the
+        # observed occupancy EWMA (ReplicaPool.expected_server_time)
+        nb = jnp.maximum(carry.avg_batch, 1.0)
+        st_eff = (_batch_latency(spec, nb) / nb).astype(dt)
+        plan = plan_fleet(spec.planner, fleet, now, bw_plan, st_eff)
     theta = jnp.where(active, plan.theta, 0.0)
     res_idx = jnp.where(active, plan.resolution, m - 1)
     n_off = jnp.where(active, plan.n_offloads, 0)
@@ -303,7 +336,73 @@ def _round_step(spec: EngineSpec, params: EngineParams,
     rep_busy, rep_n = carry.rep_busy, carry.rep_n
     rep_busy_s, rep_queued_s = carry.rep_busy_s, carry.rep_queued_s
     st_row = params.replica_st[replica_o].astype(dt)
-    if spec.serial_replicas:
+    service_o = st_row  # per-row reported processing time (= whole-batch
+    # f(n) under continuous batching — ReplicaPool.last_service semantics)
+    avg_batch = carry.avg_batch
+    if spec.batch_kind != "none":
+        # continuous batching (ReplicaPool._process_batched): per replica,
+        # admission-window batch formation over arrival-sorted rows.  Each
+        # fori_loop iteration forms ONE batch via a rank-space pointer —
+        # O(N) iterations x O(N) work per replica, the same opt-in cost
+        # class as the per-row jsq/least_land scan above.
+        w = spec.batch_window
+        bcap = spec.batch_cap if spec.batch_cap > 0 else N
+        repk = jnp.where(m_o, replica_o, K)
+        o3 = _lexsort2(repk.astype(dt), jnp.argsort(jnp.where(m_o, end_tx, inf)))
+        m3 = m_o[o3]
+        a3, k3 = end_tx[o3], repk[o3]
+        done3 = jnp.zeros((N,), dtype=dt)
+        serv3 = jnp.zeros((N,), dtype=dt)
+        size3 = jnp.zeros((N,), dtype=dt)
+        for k in range(K):
+            mk = m3 & (k3 == k)
+            n_k = mk.sum(dtype=jnp.int32)
+            rk = jnp.cumsum(mk.astype(jnp.int32)) - 1  # rank within replica
+
+            def bstep(i, st7, mk=mk, rk=rk, n_k=n_k):
+                p, busy, done_k, serv_k, size_k, wire_k, queued_k = st7
+                live = p < n_k
+                rem = mk & (rk >= p)  # not-yet-batched rows, a3 ascending
+                a0 = jnp.min(jnp.where(rem, a3, inf))
+                t_open = jnp.maximum(busy, a0)
+                nwin = (rem & (a3 <= t_open + w)).sum(dtype=jnp.int32)
+                count = jnp.minimum(nwin, bcap)
+                member = rem & (rk < p + count)  # smallest-a3 rows first
+                arr_last = jnp.max(jnp.where(member, a3, _NEG))
+                # cap binding: launch at the last member's landing; else
+                # when the admission window closes
+                t_start = jnp.where(nwin > bcap,
+                                    jnp.maximum(t_open, arr_last), t_open + w)
+                fb = _batch_latency(spec, count.astype(dt))
+                done_v = t_start + fb
+                upd = member & live
+                done_k = jnp.where(upd, done_v, done_k)
+                serv_k = jnp.where(upd, fb, serv_k)
+                size_k = jnp.where(upd, count.astype(dt), size_k)
+                wire_k = wire_k + jnp.where(live, fb, 0.0)
+                queued_k = queued_k + jnp.where(upd, t_start - a3, 0.0).sum()
+                busy = jnp.where(live, done_v, busy)
+                p = p + jnp.where(live, count, 0)
+                return p, busy, done_k, serv_k, size_k, wire_k, queued_k
+
+            init = (jnp.zeros((), jnp.int32), rep_busy[k].astype(dt),
+                    done3, serv3, size3, jnp.zeros((), dt), jnp.zeros((), dt))
+            (_, busy_k, done3, serv3, size3, wire_k,
+             queued_k) = jax.lax.fori_loop(0, N, bstep, init)
+            rep_busy = rep_busy.at[k].set(busy_k)
+            rep_n = rep_n.at[k].add(n_k)
+            rep_busy_s = rep_busy_s.at[k].add(wire_k)
+            rep_queued_s = rep_queued_s.at[k].add(queued_k)
+        done_o = jnp.zeros((N,), dtype=dt).at[o3].set(done3)
+        service_o = jnp.zeros((N,), dtype=dt).at[o3].set(serv3)
+        size_o = jnp.zeros((N,), dtype=dt).at[o3].set(size3)
+        n_live = m_o.sum(dtype=jnp.int32)
+        obs = jnp.where(m_o, size_o, 0.0).sum() / jnp.maximum(n_live, 1)
+        avg_batch = jnp.where(
+            n_live > 0,
+            (1.0 - spec.batch_beta) * carry.avg_batch + spec.batch_beta * obs,
+            carry.avg_batch)
+    elif spec.serial_replicas:
         repk = jnp.where(m_o, replica_o, K)
         o3 = _lexsort2(repk.astype(dt), jnp.argsort(jnp.where(m_o, end_tx, inf)))
         m3 = m_o[o3]
@@ -341,8 +440,10 @@ def _round_step(spec: EngineSpec, params: EngineParams,
     correct_r = (final_ok & valid).sum(axis=1, dtype=jnp.int32)
 
     # (9) EWMA bandwidth observations in transmission order
-    # (FleetRunner.observe_bandwidth; replica queueing deliberately included)
-    seconds_o = lands_o - sub_o - spec.latency - st_row
+    # (FleetRunner.observe_bandwidth; replica queueing deliberately included;
+    # replies report their actual processing time — the whole-batch f(n)
+    # under continuous batching, per-request service time otherwise)
+    seconds_o = lands_o - sub_o - spec.latency - service_o
     okbw = m_o & (seconds_o > 1e-9)
     rate_o = pay_o / jnp.where(okbw, seconds_o, 1.0)
     bw_est = ewma_fold(carry.bw_est, spec.bw_alpha, s_o, rate_o, okbw, S, B)
@@ -373,7 +474,8 @@ def _round_step(spec: EngineSpec, params: EngineParams,
         frames=carry.frames + valid.sum(axis=1, dtype=jnp.int32),
         offloaded=carry.offloaded + off_counts,
         missed=carry.missed + miss_counts,
-        correct=carry.correct + correct_r)
+        correct=carry.correct + correct_r,
+        avg_batch=avg_batch)
 
     if spec.collect == "none":
         return out, None
@@ -396,13 +498,18 @@ def make_engine(spec: EngineSpec):
 
     Returns ``run(params, carry, inputs) -> (carry, RoundTrace | None)``
     where ``inputs`` is a ``RoundInputs`` of (R, ...) stacked rounds.
+
+    The carry is DONATED: its buffers are reused for the output carry, so
+    the S=10^5 fleet state never round-trips through fresh allocations
+    between calls.  Callers must not reuse a carry after passing it in —
+    build a fresh one via ``init_carry`` (or thread the returned carry).
     """
 
     def run(params: EngineParams, carry: EngineCarry, inputs: RoundInputs):
         step = lambda c, x: _round_step(spec, params, c, x)
         return jax.lax.scan(step, carry, inputs)
 
-    return jax.jit(run)
+    return jax.jit(run, donate_argnums=(1,))
 
 
 def simulate(spec: EngineSpec, params: EngineParams, inputs: RoundInputs,
@@ -434,6 +541,20 @@ def spec_from_server(server, collect: str = "metrics") -> EngineSpec:
         if up.jitter > 0 or up.trace is not None:
             raise ValueError("backend='jax' supports constant-rate cell "
                              "uplinks only (no jitter/trace)")
+    pool = server.fabric.pool
+    batch_kind, batch_coeffs, batch_window, batch_cap = "none", (), 0.0, 0
+    batch_beta = 0.25
+    if getattr(pool, "batching", None) is not None and pool._batching_live:
+        # live continuous batching: flatten the latency model into static
+        # coefficients; a degenerate config stays on the per-request path
+        # (bit-for-bit with the pre-batching engine, like numpy's routing)
+        from repro.slowtier import model_coeffs
+
+        batch_kind, batch_coeffs = model_coeffs(pool.batching.model)
+        batch_window = float(pool.batching.window_s)
+        cap = pool.batching.cap
+        batch_cap = 0 if np.isinf(cap) else int(cap)
+        batch_beta = pool.batch_beta
     planner = spec_for_policy(
         policy, sizes=fleet.sizes, acc_server=fleet.acc_server,
         deadline=fleet.deadline, latency=fleet.latency,
@@ -447,7 +568,10 @@ def spec_from_server(server, collect: str = "metrics") -> EngineSpec:
         prune=bool(getattr(policy, "prune_expired", True)),
         oneshot=isinstance(policy, OneShotPolicy),
         t_fast=float(server.cfg.fast_time + server.cfg.calib_time),
-        bw_alpha=fleet.bw_alpha, collect=collect)
+        bw_alpha=fleet.bw_alpha, collect=collect,
+        batch_kind=batch_kind, batch_coeffs=batch_coeffs,
+        batch_window=batch_window, batch_cap=batch_cap,
+        batch_beta=batch_beta)
 
 
 def params_from_server(server, spec: EngineSpec) -> EngineParams:

@@ -84,7 +84,8 @@ def assert_plan_equal(pn, pj, ctx=""):
                                err_msg=f"{ctx}: base_acc")
 
 
-@pytest.mark.parametrize("policy", ["cbo", "threshold", "local", "server"])
+@pytest.mark.parametrize("policy", ["cbo", "threshold", "local", "server",
+                                    "greedy-rate"])
 @pytest.mark.parametrize("S", [1, 3, 17])
 def test_planner_parity(policy, S):
     for seed in range(4):

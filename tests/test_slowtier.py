@@ -1,0 +1,383 @@
+"""Continuous-batching slow tier (``src/repro/slowtier``).
+
+Four layers:
+
+* **formation oracle** — vectorized ``form_batches`` against the
+  one-request-at-a-time ``form_batches_looped`` reference, bit-for-bit
+  (hypothesis when installed, seeded fuzz always), plus hand-built edge
+  cases: window-boundary ties, occupancy-cap spill, paged-capacity caps,
+  zero-length rounds;
+* **pool delegation** — ``ReplicaPool(batching=...)`` groups per replica
+  exactly like its serial path, folds occupancy into the EWMA, and keeps
+  the *degenerate* config (FlatService, window 0, cap 1) bit-for-bit with
+  a batching-free pool;
+* **calibration** — the ``fit_*`` least-squares fitters recover exact
+  coefficients from noiseless samples and ``kind="best"`` picks the right
+  family;
+* **backends** — a degenerate-batching fabric still pins
+  ``tests/data/fabric_snapshot.json`` on BOTH engine backends, and a live
+  LinearBatch+window fabric stays decision-for-decision equal between the
+  numpy and jax round loops (the ``_diff`` exactness policy).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, strategies as st
+
+from repro.slowtier import (ContinuousBatching, FlatService, LinearBatch,
+                            StepBatch, fit_flat, fit_latency_model, fit_linear,
+                            fit_step, form_batches, form_batches_looped,
+                            model_coeffs, model_from_coeffs)
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+
+
+# --------------------------------------------------------------------- #
+# formation: vectorized == looped, bit-for-bit
+# --------------------------------------------------------------------- #
+
+MODELS = [FlatService(0.02), LinearBatch(0.015, 0.004),
+          StepBatch(0.01, 0.008, page_size=4),
+          StepBatch(0.01, 0.008, page_size=4, max_pages=2)]
+
+
+def _assert_formation_equal(arr, cfg, busy0):
+    got = form_batches(arr, cfg, busy0=busy0)
+    ref = form_batches_looped(arr, cfg, busy0=busy0)
+    for name, g, r in zip(("done", "service", "batch_size", "batch_id"),
+                          got, ref):
+        assert np.array_equal(g, r), (name, cfg, arr, g, r)
+    return got
+
+
+def _fuzz_case(rng):
+    n = int(rng.integers(1, 50))
+    arr = np.sort(rng.exponential(0.02, size=n).cumsum())
+    if rng.random() < 0.3:  # quantize: coincident arrivals + boundary ties
+        arr = np.round(arr, 2)
+    cfg = ContinuousBatching(
+        MODELS[int(rng.integers(len(MODELS)))],
+        window_s=float(rng.choice([0.0, 0.002, 0.01, 0.05])),
+        max_batch=int(rng.integers(1, 10)) if rng.random() < 0.5 else None)
+    return arr, cfg, float(rng.uniform(0.0, 0.15))
+
+
+def test_formation_matches_looped_seeded_fuzz():
+    rng = np.random.default_rng(7)
+    for _ in range(200):
+        arr, cfg, busy0 = _fuzz_case(rng)
+        _assert_formation_equal(arr, cfg, busy0)
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.integers(0, 2**32 - 1))
+def test_formation_matches_looped_hypothesis(seed):
+    arr, cfg, busy0 = _fuzz_case(np.random.default_rng(seed))
+    _assert_formation_equal(arr, cfg, busy0)
+
+
+def test_formation_zero_length_round():
+    for cfg in (ContinuousBatching(MODELS[1], window_s=0.01),
+                ContinuousBatching(MODELS[0])):
+        done, service, bsize, bid = form_batches(np.zeros(0), cfg)
+        assert done.shape == service.shape == bsize.shape == bid.shape == (0,)
+
+
+def test_window_boundary_tie_joins():
+    # an arrival exactly at t_open + window is admitted (<=, not <)
+    w = 0.03125  # f32/f64-exact
+    cfg = ContinuousBatching(LinearBatch(0.01, 0.002), window_s=w)
+    arr = np.array([0.0, w, w + 1e-9])
+    done, service, bsize, bid = form_batches(arr, cfg)
+    assert list(bid) == [0, 0, 1]  # boundary joins; epsilon-later spills
+    assert bsize[0] == 2
+    # batch 0 launches when its window closes, not at the tie's arrival
+    assert done[0] == w + float(cfg.model.batch_latency(2))
+
+
+def test_cap_spill_launches_at_last_member():
+    # cap binds -> batch launches at its last member's landing, the excess
+    # spills to a batch opening no earlier than the first one's completion
+    cfg = ContinuousBatching(LinearBatch(0.01, 0.002), window_s=1.0,
+                             max_batch=2)
+    arr = np.array([0.0, 0.25, 0.5])
+    done, service, bsize, bid = form_batches(arr, cfg)
+    assert list(bid) == [0, 0, 1] and list(bsize) == [2, 2, 1]
+    f2 = float(cfg.model.batch_latency(2))
+    assert done[0] == 0.25 + f2  # launch at arr[1], not window close
+    # the spilled request's batch opens at max(busy, its arrival)
+    assert done[2] == max(0.25 + f2, 0.5) + 1.0 + float(cfg.model.batch_latency(1))
+
+
+def test_step_batch_capacity_caps_admission():
+    model = StepBatch(0.01, 0.008, page_size=4, max_pages=2)
+    assert model.capacity == 8
+    cfg = ContinuousBatching(model, window_s=10.0)
+    assert cfg.cap == 8.0
+    arr = np.zeros(20)  # all land at once: 8 + 8 + 4
+    done, service, bsize, bid = form_batches(arr, cfg)
+    assert list(np.bincount(bid)) == [8, 8, 4]
+    # max_batch tightens the model's cap, never loosens it
+    assert ContinuousBatching(model, max_batch=3).cap == 3.0
+    assert ContinuousBatching(model, max_batch=99).cap == 8.0
+
+
+def test_degenerate_predicate():
+    flat = FlatService(0.02)
+    assert ContinuousBatching(flat, window_s=0.0, max_batch=1).degenerate
+    assert not ContinuousBatching(flat, window_s=0.01, max_batch=1).degenerate
+    assert not ContinuousBatching(flat, window_s=0.0, max_batch=2).degenerate
+    assert not ContinuousBatching(LinearBatch(0.0, 0.02), max_batch=1).degenerate
+
+
+def test_model_coeffs_roundtrip():
+    for m in MODELS[:3]:
+        kind, coeffs = model_coeffs(m)
+        m2 = model_from_coeffs(kind, coeffs)
+        n = np.arange(1, 9, dtype=np.float64)
+        assert np.array_equal(m.batch_latency(n), m2.batch_latency(n))
+
+
+def test_config_validation():
+    with pytest.raises(ValueError):
+        ContinuousBatching(FlatService(0.02), window_s=-0.1)
+    with pytest.raises(ValueError):
+        ContinuousBatching(FlatService(0.02), max_batch=0)
+    with pytest.raises(ValueError):
+        StepBatch(0.01, 0.008, page_size=0)
+    with pytest.raises(ValueError):
+        StepBatch(0.01, 0.008, page_size=4, max_pages=0)
+
+
+# --------------------------------------------------------------------- #
+# pool delegation
+# --------------------------------------------------------------------- #
+
+
+def _pool_rounds(pool, rng, n_rounds=6, max_batch=30):
+    """Drive a pool through seeded rounds; return per-round outputs."""
+    outs = []
+    t = 0.0
+    for _ in range(n_rounds):
+        n = int(rng.integers(0, max_batch))
+        arr = np.sort(t + rng.uniform(0.0, 0.3, size=n))
+        rep = rng.integers(0, pool.n_replicas, size=n)
+        outs.append((pool.process(arr, rep), pool.last_service.copy()))
+        t += 0.3
+    return outs
+
+
+def test_degenerate_pool_bit_equal_serial():
+    from repro.net import ReplicaPool
+
+    st_vec = np.array([0.02, 0.03, 0.025])
+    degen = ContinuousBatching(FlatService(0.02), window_s=0.0, max_batch=1)
+    for seed in range(4):
+        plain = ReplicaPool(3, st_vec, serial=True)
+        batched = ReplicaPool(3, st_vec, serial=True, batching=degen)
+        assert not batched._batching_live
+        outs_p = _pool_rounds(plain, np.random.default_rng(seed))
+        outs_b = _pool_rounds(batched, np.random.default_rng(seed))
+        for (d_p, s_p), (d_b, s_b) in zip(outs_p, outs_b):
+            assert np.array_equal(d_p, d_b)
+            assert np.array_equal(s_p, s_b)
+        assert np.array_equal(plain.busy_until, batched.busy_until)
+        assert np.array_equal(plain.busy_seconds, batched.busy_seconds)
+        assert np.array_equal(plain.queued_seconds, batched.queued_seconds)
+        assert np.array_equal(plain.n_jobs, batched.n_jobs)
+        assert batched.avg_batch == 1.0  # degenerate path never feeds the EWMA
+
+
+def test_batched_pool_matches_formation_per_replica():
+    # the pool's scatter/gather around form_batches must reproduce the raw
+    # per-replica formation on the same grouped arrivals
+    from repro.net import ReplicaPool
+
+    rng = np.random.default_rng(3)
+    cfg = ContinuousBatching(LinearBatch(0.015, 0.004), window_s=0.01)
+    pool = ReplicaPool(2, 0.02, serial=True, batching=cfg)
+    n = 24
+    arr = np.sort(rng.uniform(0.0, 0.4, size=n))
+    rep = rng.integers(0, 2, size=n)
+    busy0 = pool.busy_until.copy()
+    done = pool.process(arr, rep)
+    for k in range(2):
+        sel = rep == k
+        d_ref, f_ref, _, _ = form_batches(arr[sel], cfg, busy0=busy0[k])
+        assert np.array_equal(done[sel], d_ref)
+        assert np.array_equal(pool.last_service[sel], f_ref)
+        assert pool.busy_until[k] == d_ref[-1]
+
+
+def test_pool_occupancy_ewma_and_expected_server_time():
+    from repro.net import ReplicaPool
+
+    cfg = ContinuousBatching(LinearBatch(0.015, 0.005), window_s=1.0)
+    pool = ReplicaPool(1, 0.02, serial=True, batching=cfg, batch_beta=0.5)
+    assert pool.avg_batch == 1.0
+    assert pool.expected_server_time() == cfg.model.per_request(1.0)
+    # 4 coincident requests -> one batch of 4 -> EWMA moves halfway to 4
+    pool.process(np.zeros(4), np.zeros(4, dtype=np.int64))
+    assert pool.avg_batch == 0.5 * 1.0 + 0.5 * 4.0
+    assert pool.expected_server_time() == pytest.approx(
+        float(cfg.model.per_request(pool.avg_batch)))
+    # empty rounds leave the EWMA alone
+    pool.process(np.zeros(0), np.zeros(0, dtype=np.int64))
+    assert pool.avg_batch == 2.5
+    assert pool.last_service.shape == (0,)
+    pool.reset()
+    assert pool.avg_batch == 1.0
+    # without batching the estimate is the nominal mean, untouched
+    plain = ReplicaPool(2, np.array([0.02, 0.04]))
+    assert plain.expected_server_time() == plain.nominal_server_time
+
+
+def test_pool_rejects_batching_without_serial():
+    from repro.net import ReplicaPool
+
+    with pytest.raises(ValueError):
+        ReplicaPool(1, 0.02, serial=False,
+                    batching=ContinuousBatching(FlatService(0.02)))
+    with pytest.raises(ValueError):
+        ReplicaPool(1, 0.02, batch_beta=0.0)
+
+
+# --------------------------------------------------------------------- #
+# calibration
+# --------------------------------------------------------------------- #
+
+
+def test_fit_recovers_exact_coefficients():
+    n = np.array([1, 2, 4, 8, 16, 32], dtype=np.float64)
+    flat, r0 = fit_flat(n, FlatService(0.0375).batch_latency(n))
+    assert flat.server_time == pytest.approx(0.0375) and r0 < 1e-12
+    lin, r1 = fit_linear(n, LinearBatch(0.012, 0.0031).batch_latency(n))
+    assert lin.base == pytest.approx(0.012)
+    assert lin.per_item == pytest.approx(0.0031)
+    assert r1 < 1e-12
+    step_true = StepBatch(0.01, 0.008, page_size=4)
+    stp, r2 = fit_step(n, step_true.batch_latency(n), page_size=4)
+    assert stp.base == pytest.approx(0.01)
+    assert stp.per_page == pytest.approx(0.008)
+    assert r2 < 1e-12
+
+
+def test_fit_best_picks_generating_family():
+    n = np.array([1, 2, 3, 4, 6, 8, 12, 16], dtype=np.float64)
+    best, _ = fit_latency_model(n, LinearBatch(0.02, 0.001).batch_latency(n),
+                                kind="best")
+    assert isinstance(best, LinearBatch)
+    best, _ = fit_latency_model(
+        n, StepBatch(0.015, 0.01, page_size=4).batch_latency(n),
+        kind="best", page_size=4)
+    assert isinstance(best, StepBatch)
+    with pytest.raises(ValueError):
+        fit_latency_model(n, n, kind="nope")
+    with pytest.raises(ValueError):
+        fit_linear(np.array([0.5]), np.array([0.1]))  # batch sizes >= 1
+
+
+def test_fit_clamps_negative_base():
+    # noise can drive the unconstrained intercept negative; the fitter clamps
+    n = np.array([1.0, 2.0, 3.0])
+    y = np.array([0.001, 0.0035, 0.006])  # intercept ~ -0.0015
+    lin, _ = fit_linear(n, y)
+    assert lin.base == 0.0 and lin.per_item > 0.0
+
+
+# --------------------------------------------------------------------- #
+# backends: snapshot pin + numpy/jax differential under live batching
+# --------------------------------------------------------------------- #
+
+
+def _make_batching_server(backend, S, batching, *, bw_mbps=30.0, seed=0):
+    from repro.core.netsim import Uplink, mbps
+    from repro.net import EdgeFabric, ReplicaPool
+    from repro.serving import FairScheduler, MultiStreamServer, ServeConfig
+    from repro.serving.synthetic import synthetic_tiers
+
+    fast, slow, cal = synthetic_tiers()
+    cfg = ServeConfig(resolutions=(4, 8), acc_server=(0.7, 0.99), batch_size=16,
+                      frame_rate=32.0, deadline=0.2)
+    ups = [Uplink(bandwidth_bps=mbps(bw_mbps * 0.6), latency=0.05,
+                  server_time=cfg.server_time, seed=seed + c)
+           for c in range(2)]
+    pool = ReplicaPool(2, np.array([cfg.server_time, cfg.server_time * 1.5]),
+                       serial=True, batching=batching)
+    fab = EdgeFabric(ups, pool, n_streams=S, placement="jsq")
+    return MultiStreamServer(cfg, fast, slow, cal, None, n_streams=S,
+                             scheduler=FairScheduler("round_robin"), fabric=fab,
+                             policy="cbo", backend=backend)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_degenerate_batching_pins_fabric_snapshot(backend):
+    # same topology/workload as test_fleet_jax.py::test_fabric_snapshot's
+    # "fabric" case, with a *degenerate* batching config attached: the pin
+    # must hold bit-for-bit on both backends
+    from repro.serving.synthetic import synthetic_streams
+
+    with open(os.path.join(DATA, "fabric_snapshot.json")) as f:
+        snap = json.load(f)["fabric"]
+    S = 12
+    # any FlatService makes the config degenerate; the pool's own per-replica
+    # server_time is what the legacy path actually charges
+    degen = ContinuousBatching(FlatService(0.037), window_s=0.0, max_batch=1)
+    srv = _make_batching_server(backend, S, degen, bw_mbps=50.0)
+    imgs, labels = synthetic_streams(S, 64)
+    agg = srv.process_streams(imgs, labels)
+    assert agg.accuracy == pytest.approx(snap["accuracy"], abs=1e-12)
+    assert int(agg.n_offloaded) == snap["n_offloaded"]
+    assert int(agg.n_deadline_miss) == snap["n_deadline_miss"]
+    for m, ref in zip(agg.per_stream, snap["per_stream"]):
+        assert m.accuracy == pytest.approx(ref["accuracy"], abs=1e-12)
+
+
+def test_live_batching_differential_numpy_vs_jax():
+    # LinearBatch + admission window (f32-exact coefficients): the two
+    # round loops must agree decision-for-decision at the _diff tolerances
+    from _diff import assert_round_equal
+    from repro.serving.synthetic import synthetic_streams
+
+    S = 12
+    batching = ContinuousBatching(LinearBatch(0.03125, 0.0078125),
+                                  window_s=0.03125)
+    imgs, labels = synthetic_streams(S, 64, seed=0)
+    records, metrics = {}, {}
+    for backend in ("numpy", "jax"):
+        srv = _make_batching_server(backend, S, batching)
+        recs = []
+        srv.round_hook = recs.append
+        metrics[backend] = srv.process_streams(imgs, labels)
+        records[backend] = recs
+    rn, rj = records["numpy"], records["jax"]
+    assert len(rn) == len(rj)
+    for i, (a, b) in enumerate(zip(rn, rj)):
+        assert_round_equal(a, b, ctx=f"live batching round {i}")
+    mn, mj = metrics["numpy"], metrics["jax"]
+    assert mn.n_frames == mj.n_frames
+    assert mn.n_offloaded == mj.n_offloaded
+    assert mn.n_deadline_miss == mj.n_deadline_miss
+    assert mn.accuracy == mj.accuracy
+    assert mn.n_offloaded > 0  # the workload actually exercises the slow tier
+
+
+def test_live_batching_occupancy_tracks_across_backends():
+    from repro.serving.synthetic import synthetic_streams
+
+    S = 12
+    batching = ContinuousBatching(LinearBatch(0.03125, 0.0078125),
+                                  window_s=0.03125)
+    imgs, labels = synthetic_streams(S, 64, seed=0)
+    occ = {}
+    for backend in ("numpy", "jax"):
+        srv = _make_batching_server(backend, S, batching)
+        srv.process_streams(imgs, labels)
+        occ[backend] = srv.fabric.pool.avg_batch
+    assert occ["numpy"] > 1.0  # real batches formed
+    assert occ["jax"] == pytest.approx(occ["numpy"], rel=1e-5)
