@@ -19,18 +19,29 @@ element traffic, so narrow containers land lower than wide hosts).
 ``--backend jax`` benchmarks the compiled round loop instead
 (``serving/engine_jax.py``): after an exact-integer parity gate at small S
 (both ``MultiStreamServer`` backends replay the same workload and must
-agree on every offload/schedule/miss count), it scans synthetic
+agree on every offload/schedule/miss count — and, under ``--devices N``,
+the mesh-sharded jax run must agree with both), it scans synthetic
 ``RoundInputs`` through the jitted ``lax.scan`` engine at fleet sizes up
-to S=100000 (max_backlog=8 — the CPU-feasible regime the paper's fleets
-run in) and reports rounds/sec and frames/sec, compile time excluded.
-Results land in ``results/bench/BENCH_fleet.json``.
+to S=10^6 (max_backlog=8 — the CPU-feasible regime the paper's fleets
+run in) and reports rounds/sec and frames/sec.  The engine is AOT-lowered
+(``lower().compile()``) so ``compile_s`` and ``steady_s`` are measured
+separately, never inferred by subtraction.  Results land in
+``results/bench/BENCH_fleet.json``.
+
+``--devices N`` forces N XLA host devices (the flag must land before jax
+imports, so pass it on the command line, not from a REPL that already
+imported jax) and runs the scan with the ``"streams"`` axis sharded over
+an (N, 1) mesh; ``--streams`` overrides the fleet-size sweep.
 
   PYTHONPATH=src:benchmarks python benchmarks/bench_fleet_control.py --backend jax
   PYTHONPATH=src:benchmarks python benchmarks/bench_fleet_control.py --smoke --backend jax
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python benchmarks/bench_fleet_control.py --backend jax --devices 8 --streams 1000000
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import os
 import sys
 import time
@@ -41,7 +52,28 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 FLEET_SIZES = (16, 64, 256, 1024)
-JAX_FLEET_SIZES = (1000, 10000, 100000)
+JAX_FLEET_SIZES = (1000, 10000, 100000, 1000000)
+
+
+def _force_host_devices(n: int) -> None:
+    """Make sure this process sees >= n XLA devices.  The host-platform
+    device count only takes effect before jax initializes, so set the flag
+    when jax is not yet imported and fail with a recipe when it is."""
+    if n <= 1:
+        return
+    flag = f"--xla_force_host_platform_device_count={n}"
+    if "jax" in sys.modules:
+        import jax
+
+        if len(jax.devices()) < n:
+            raise SystemExit(
+                f"--devices {n}: jax is already initialized with "
+                f"{len(jax.devices())} device(s); relaunch with "
+                f"XLA_FLAGS={flag}")
+        return
+    cur = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in cur:
+        os.environ["XLA_FLAGS"] = (cur + " " + flag).strip()
 
 
 def build_fleet(policy: str, S: int, seed: int, backlog: int = 16):
@@ -106,10 +138,13 @@ def bench_one(policy: str, S: int, seed: int, repeats: int, backlog: int = 16) -
             "speedup": round(tl / max(tb, 1e-12), 2)}
 
 
-def check_jax_parity(S: int = 4, n_frames: int = 64, seed: int = 0) -> dict:
+def check_jax_parity(S: int = 4, n_frames: int = 64, seed: int = 0,
+                     devices: int = 1) -> dict:
     """Exact-integer gate: both ``MultiStreamServer`` backends replay the
     same seeded workload and must agree on every aggregate decision count
-    (frame_rate=32 — the tie-free grid, see tests/_diff.py)."""
+    (frame_rate=32 — the tie-free grid, see tests/_diff.py).  With
+    ``devices > 1`` the jax backend runs a THIRD time under a streams mesh
+    and must match decision-for-decision too."""
     from repro.core.netsim import Uplink, mbps
     from repro.net import EdgeFabric
     from repro.serving import MultiStreamServer, ServeConfig
@@ -119,36 +154,56 @@ def check_jax_parity(S: int = 4, n_frames: int = 64, seed: int = 0) -> dict:
     cfg = ServeConfig(resolutions=(4, 8), acc_server=(0.7, 0.99), batch_size=16,
                       frame_rate=32.0, deadline=0.2)
     imgs, labels = synthetic_streams(S, n_frames, seed=seed)
-    mets = {}
-    for backend in ("numpy", "jax"):
+
+    def run(backend, mesh=None):
+        from repro.sharding.axes import sharding_ctx
+
         fab = EdgeFabric.degenerate(
             Uplink(bandwidth_bps=mbps(50.0), latency=0.05,
                    server_time=cfg.server_time), n_streams=S)
-        mets[backend] = MultiStreamServer(
-            cfg, fast, slow, cal, None, n_streams=S, fabric=fab,
-            backend=backend).process_streams(imgs, labels)
-    mn, mj = mets["numpy"], mets["jax"]
-    for k in ("n_frames", "n_offloaded", "n_deadline_miss"):
-        assert getattr(mn, k) == getattr(mj, k), (k, getattr(mn, k), getattr(mj, k))
-    assert mn.accuracy == mj.accuracy, (mn.accuracy, mj.accuracy)
-    return {"parity": "exact", "n_streams": S, "n_frames": int(mn.n_frames),
-            "n_offloaded": int(mn.n_offloaded)}
+        srv = MultiStreamServer(cfg, fast, slow, cal, None, n_streams=S,
+                                fabric=fab, backend=backend)
+        with sharding_ctx(mesh) if mesh is not None else contextlib.nullcontext():
+            return srv.process_streams(imgs, labels)
+
+    runs = {"numpy": run("numpy"), "jax": run("jax")}
+    if devices > 1:
+        from repro.launch.mesh import make_streams_mesh
+
+        runs[f"jax@{devices}dev"] = run("jax", make_streams_mesh(devices))
+    mn = runs["numpy"]
+    for name, mj in runs.items():
+        for k in ("n_frames", "n_offloaded", "n_deadline_miss"):
+            assert getattr(mn, k) == getattr(mj, k), (
+                name, k, getattr(mn, k), getattr(mj, k))
+        assert mn.accuracy == mj.accuracy, (name, mn.accuracy, mj.accuracy)
+    return {"parity": "exact", "runs": "==".join(runs), "n_streams": S,
+            "n_frames": int(mn.n_frames), "n_offloaded": int(mn.n_offloaded)}
 
 
 def bench_jax_one(S: int, n_rounds: int, seed: int, backlog: int = 8,
-                  batch: int = 8) -> dict:
+                  batch: int = 8, devices: int = 1) -> dict:
     """Round-loop throughput of the jitted engine on synthetic inputs.
 
     ``collect="none"`` so the scan carries nothing per round beyond the
-    fleet state — the S=1e5 regime the numpy loop cannot reach."""
+    fleet state — the S=1e6 regime the numpy loop cannot reach.  With
+    ``devices > 1`` the (S,) stream arrays are placed sharded over an
+    (N, 1) mesh (S rounds up to a device multiple) and the jitted scan
+    runs SPMD.  The engine is AOT-compiled so the reported ``compile_s``
+    is the real lower+compile wall-clock, not a first-call subtraction."""
     import jax
     import jax.numpy as jnp
 
     from repro.core.netsim import mbps, payload_sizes, png_size_model
+    from repro.launch.mesh import make_streams_mesh
     from repro.policy.fleet_jax import spec_for_policy
     from repro.policy.registry import make_policy
     from repro.serving import engine_jax as ej
+    from repro.sharding.axes import host_shard, sharding_ctx
 
+    S = -(-S // devices) * devices  # pad to a whole number of shards
+    ctx = (sharding_ctx(make_streams_mesh(devices)) if devices > 1
+           else contextlib.nullcontext())
     resolutions = (4, 8)
     sizes = payload_sizes(png_size_model, np.asarray(resolutions))
     pspec = spec_for_policy(make_policy("cbo", max_backlog=backlog),
@@ -157,71 +212,88 @@ def bench_jax_one(S: int, n_rounds: int, seed: int, backlog: int = 8,
     spec = ej.EngineSpec(n_streams=S, batch=batch, n_cells=1, n_replicas=1,
                          planner=pspec, collect="none")
     bw = mbps(6.0)
-    params = ej.EngineParams(
-        sizes=jnp.asarray(sizes, dtype=jnp.float32),
-        cell_bw=jnp.asarray([bw], dtype=jnp.float32),
-        cell_of=jnp.zeros(S, dtype=jnp.int32),
-        replica_st=jnp.asarray([0.037], dtype=jnp.float32),
-        stream_bw=jnp.full((S,), bw, dtype=jnp.float32),
-        weights=jnp.ones(S, dtype=jnp.float32),
-        bw_init=jnp.full((S,), bw, dtype=jnp.float32))
     rng = np.random.default_rng(seed)
     fr = 32.0
     base = (np.arange(n_rounds * batch, dtype=np.float32) / fr).reshape(
         n_rounds, 1, batch)
     m = len(resolutions)
-    inputs = ej.RoundInputs(
-        arr=jnp.asarray(np.broadcast_to(base, (n_rounds, S, batch))),
-        valid=jnp.ones((n_rounds, S, batch), dtype=bool),
-        conf=jnp.asarray(rng.uniform(0.0, 1.0, (n_rounds, S, batch)),
-                         dtype=jnp.float32),
-        fast_ok=jnp.asarray(rng.random((n_rounds, S, batch)) < 0.7),
-        slow_ok=jnp.asarray(rng.random((n_rounds, S, batch, m)) < 0.9))
+    with ctx:
+        params = ej.EngineParams(
+            sizes=jnp.asarray(sizes, dtype=jnp.float32),
+            cell_bw=jnp.asarray([bw], dtype=jnp.float32),
+            cell_of=host_shard(jnp.zeros(S, dtype=jnp.int32), "streams"),
+            replica_st=jnp.asarray([0.037], dtype=jnp.float32),
+            stream_bw=host_shard(jnp.full((S,), bw, dtype=jnp.float32),
+                                 "streams"),
+            weights=host_shard(jnp.ones(S, dtype=jnp.float32), "streams"),
+            bw_init=host_shard(jnp.full((S,), bw, dtype=jnp.float32),
+                               "streams"))
+        inputs = ej.RoundInputs(
+            arr=host_shard(jnp.asarray(np.broadcast_to(base, (n_rounds, S, batch))),
+                           None, "streams", None),
+            valid=host_shard(jnp.ones((n_rounds, S, batch), dtype=bool),
+                             None, "streams", None),
+            conf=host_shard(jnp.asarray(rng.uniform(0.0, 1.0, (n_rounds, S, batch)),
+                                        dtype=jnp.float32),
+                            None, "streams", None),
+            fast_ok=host_shard(jnp.asarray(rng.random((n_rounds, S, batch)) < 0.7),
+                               None, "streams", None),
+            slow_ok=host_shard(jnp.asarray(rng.random((n_rounds, S, batch, m)) < 0.9),
+                               None, "streams", None, None))
 
-    step = ej.make_engine(spec)
-    # the engine donates its carry buffers (make_engine, donate_argnums):
-    # each timed call needs a freshly built carry, and the cheap rebuild is
-    # excluded from the timed region
-    carry0 = ej.init_carry(spec, params)
-    t0 = time.perf_counter()
-    carry, _ = step(params, carry0, inputs)
-    jax.block_until_ready(carry)
-    t_first = time.perf_counter() - t0
-    carry0 = ej.init_carry(spec, params)
-    jax.block_until_ready(carry0)
-    t0 = time.perf_counter()
-    carry, _ = step(params, carry0, inputs)
-    jax.block_until_ready(carry)
-    t_steady = time.perf_counter() - t0
-    return {"backend": "jax", "n_streams": S, "rounds": n_rounds,
-            "batch": batch, "backlog": backlog,
-            "compile_s": round(max(t_first - t_steady, 0.0), 3),
+        step = ej.make_engine(spec)
+        carry0 = ej.init_carry(spec, params)
+        jax.block_until_ready((params, carry0, inputs))
+        t0 = time.perf_counter()
+        compiled = step.lower(params, carry0, inputs).compile()
+        t_compile = time.perf_counter() - t0
+        # the engine donates its carry buffers (make_engine, donate_argnums):
+        # each call needs a freshly built carry, rebuilt outside the timed
+        # region; one warm-up execution absorbs first-dispatch costs, but
+        # at >10^7 frames a run is minutes long and dwarfs dispatch noise,
+        # so the warm-up pass is skipped rather than doubling the wall-clock
+        if n_rounds * S * batch <= 20_000_000:
+            carry, _ = compiled(params, carry0, inputs)
+            jax.block_until_ready(carry)
+            carry0 = ej.init_carry(spec, params)
+            jax.block_until_ready(carry0)
+        t0 = time.perf_counter()
+        carry, _ = compiled(params, carry0, inputs)
+        jax.block_until_ready(carry)
+        t_steady = time.perf_counter() - t0
+    return {"backend": "jax", "n_streams": S, "devices": devices,
+            "rounds": n_rounds, "batch": batch, "backlog": backlog,
+            "compile_s": round(t_compile, 3),
             "steady_s": round(t_steady, 4),
             "rounds_per_s": round(n_rounds / max(t_steady, 1e-12), 2),
             "frames_per_s": round(n_rounds * S * batch / max(t_steady, 1e-12), 1)}
 
 
 def run_jax(args) -> dict:
-    gate = check_jax_parity(seed=args.seed)
+    gate = check_jax_parity(seed=args.seed, devices=args.devices)
     print("bench_fleet_control,backend=jax," +
           ",".join(f"{k}={v}" for k, v in gate.items()), flush=True)
     sizes = (256,) if args.smoke else args.sizes
     if sizes == FLEET_SIZES:  # backend-appropriate default scale
         sizes = JAX_FLEET_SIZES
+    if args.streams:
+        sizes = args.streams
     n_rounds = 4 if args.smoke else args.rounds
     rows = []
     for S in sizes:
-        row = bench_jax_one(S, n_rounds, seed=args.seed)
+        row = bench_jax_one(S, n_rounds, seed=args.seed, devices=args.devices)
         rows.append(row)
         print("bench_fleet_control," + ",".join(f"{k}={v}" for k, v in row.items()),
               flush=True)
-    out = {"backend": "jax", "parity_gate": gate, "rows": rows,
-           "smoke": bool(args.smoke)}
+    out = {"backend": "jax", "devices": args.devices, "parity_gate": gate,
+           "rows": rows, "smoke": bool(args.smoke)}
     from benchmarks.common import emit_bench_json
 
     emit_bench_json("BENCH_fleet.json", out)
     if args.smoke:
-        print("bench_fleet_control,smoke=ok  (jax decisions == numpy decisions)")
+        who = ("jax+mesh decisions == jax decisions == numpy decisions"
+               if args.devices > 1 else "jax decisions == numpy decisions")
+        print(f"bench_fleet_control,smoke=ok  ({who})")
     return out
 
 
@@ -229,6 +301,7 @@ def run(args=None) -> dict:
     if args is None:
         args = parse_args([])
     if args.backend == "jax":
+        _force_host_devices(args.devices)
         return run_jax(args)
     sizes = (64,) if args.smoke else args.sizes
     repeats = 1 if args.smoke else args.repeats
@@ -264,6 +337,14 @@ def parse_args(argv=None):
                     help="numpy: batched-vs-looped planner; jax: compiled round loop")
     ap.add_argument("--rounds", type=int, default=16,
                     help="rounds per lax.scan run (--backend jax)")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="shard the streams axis over N forced XLA host "
+                         "devices (--backend jax; must be set before jax "
+                         "initializes — pass on the CLI, or export "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--streams", type=lambda s: tuple(int(x) for x in s.split(",")),
+                    default=(), help="fleet sizes for the jax round-loop sweep "
+                                     "(overrides --sizes; e.g. 1000000)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode: small S, single pass, exact parity gates")
     return ap.parse_args(argv)

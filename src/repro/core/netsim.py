@@ -44,6 +44,28 @@ def mbps(x: float) -> float:
     return x * 1e6 / 8.0
 
 
+def _counter_jitter_factors(seed: int, seconds: np.ndarray, jitter: float) -> np.ndarray:
+    """Counter-mode per-second jitter factors: ``fold_in(PRNGKey(seed), s)``
+    -> standard normal -> ``clip(1 + jitter*n, 0.2, 2.0)``, all in float32.
+
+    These are the exact bits the JAX engine derives *inside* the jitted
+    round scan (``serving/engine_jax.py``), so an ``Uplink`` in
+    ``jitter_mode="counter"`` sees the same per-second channel on both
+    backends.  The default "pcg" mode (host ``default_rng((seed, s))``)
+    stays untouched — it is not reproducible under ``jit``.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    key = jax.random.PRNGKey(int(seed))
+    secs = jnp.asarray(np.asarray(seconds, dtype=np.int64).astype(np.int32))
+    keys = jax.vmap(lambda s: jax.random.fold_in(key, s))(secs)
+    normals = jax.vmap(lambda k: jax.random.normal(k, dtype=jnp.float32))(keys)
+    fac = jnp.clip(jnp.float32(1.0) + jnp.float32(jitter) * normals,
+                   jnp.float32(0.2), jnp.float32(2.0))
+    return np.asarray(fac, dtype=np.float64)
+
+
 @dataclass
 class Uplink:
     bandwidth_bps: float  # bytes per second (base rate; trace overrides)
@@ -51,6 +73,11 @@ class Uplink:
     server_time: float  # T^o
     jitter: float = 0.0  # relative bandwidth jitter (OU-ish random walk)
     seed: int = 0
+    # "pcg": host numpy rng (legacy, not expressible under jit);
+    # "counter": stateless jax fold_in(seed, second) — bit-identical to the
+    # in-scan factors the compiled backend derives, so jittered uplinks can
+    # run on backend="jax"
+    jitter_mode: str = "pcg"
     trace: Optional[object] = None  # BandwidthTrace (duck-typed: .bandwidth_at)
     _busy_until: float = 0.0
     # per-second jitter factors, cached for exactly the seconds touched
@@ -64,6 +91,9 @@ class Uplink:
     queued_seconds: float = 0.0  # total head-of-line blocking across transfers
 
     def __post_init__(self):
+        if self.jitter_mode not in ("pcg", "counter"):
+            raise ValueError(f"jitter_mode must be 'pcg' or 'counter', "
+                             f"got {self.jitter_mode!r}")
         self._jit_keys = np.zeros(0, dtype=np.int64)
         self._jit_vals = np.zeros(0, dtype=np.float64)
 
@@ -87,11 +117,14 @@ class Uplink:
         uniq = np.unique(seconds)
         new = uniq[~np.isin(uniq, self._jit_keys)]
         if len(new):
-            vals = np.asarray([
-                np.clip(1.0 + self.jitter *
-                        np.random.default_rng((self.seed, int(s))).standard_normal(),
-                        0.2, 2.0)
-                for s in new])
+            if self.jitter_mode == "counter":
+                vals = _counter_jitter_factors(self.seed, new, self.jitter)
+            else:
+                vals = np.asarray([
+                    np.clip(1.0 + self.jitter *
+                            np.random.default_rng((self.seed, int(s))).standard_normal(),
+                            0.2, 2.0)
+                    for s in new])
             keys = np.concatenate([self._jit_keys, new])
             order = np.argsort(keys)
             self._jit_keys = keys[order]

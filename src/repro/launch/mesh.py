@@ -20,3 +20,18 @@ def make_local_mesh(model_axis: int = 1, data_axis: int = 1):
     model_axis = min(model_axis, n)
     data_axis = min(data_axis, n // model_axis)
     return jax.make_mesh((data_axis, model_axis), ("data", "model"))
+
+
+def make_streams_mesh(n_devices: int | None = None):
+    """Pure data-parallel mesh for fleet serving: the ``"streams"`` logical
+    axis maps to ``"data"`` (sharding/axes.py), so an (n, 1) mesh splits
+    the (S,) fleet arrays n ways while every per-cell/per-replica shared
+    reduction stays replicated.  On CPU hosts, force n devices by setting
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=n`` *before* jax
+    imports (see benchmarks/bench_fleet_control.py ``--devices``)."""
+    n = len(jax.devices()) if n_devices is None else int(n_devices)
+    if n > len(jax.devices()):
+        raise ValueError(f"asked for {n} devices, host has {len(jax.devices())} "
+                         "(set --xla_force_host_platform_device_count before "
+                         "jax imports)")
+    return jax.make_mesh((n, 1), ("data", "model"))

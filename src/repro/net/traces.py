@@ -80,6 +80,21 @@ class BandwidthTrace:
         idx = np.searchsorted(self.t, ts, side="right") - 1
         return self.bps[np.clip(idx, 0, len(self.t) - 1)]
 
+    def grid(self, pad_to: int | None = None):
+        """Fixed-shape breakpoint grid for device-side lookup: ``(t, bps)``
+        float64 arrays padded to ``pad_to`` segments.  Pad breakpoints sit
+        at ``+inf`` (no finite time ever lands in them) and repeat the last
+        rate, so a right-``searchsorted`` minus one over the padded grid
+        returns exactly what ``bandwidth_at`` returns over the ragged one —
+        this is the shape the JAX engine stores in ``EngineParams``."""
+        n = len(self.t) if pad_to is None else int(pad_to)
+        if n < len(self.t):
+            raise ValueError(f"pad_to={n} < {len(self.t)} trace segments")
+        pad = n - len(self.t)
+        t = np.concatenate([self.t, np.full(pad, np.inf)])
+        bps = np.concatenate([self.bps, np.full(pad, self.bps[-1])])
+        return t, bps
+
     @property
     def mean_bps(self) -> float:
         """Time-weighted mean rate over one period (segment-length weighted)."""

@@ -302,16 +302,25 @@ class FleetRunner:
         self.backend = backend
         self._jax_planner = None
         if backend == "jax":
-            from repro.policy.fleet_jax import make_planner, spec_for_policy
+            from repro.policy.fleet_jax import (jax_unsupported_policies,
+                                                make_planner, spec_for_policy)
 
-            if len(self.groups) != 1:
-                raise ValueError("backend='jax' needs a homogeneous fleet "
-                                 f"(one policy group); got {len(self.groups)}")
-            spec = spec_for_policy(
-                self.groups[0][0], sizes=self.sizes, acc_server=self.acc_server,
-                deadline=self.deadline, latency=self.latency,
-                server_time=self.server_time)
-            self._jax_planner = (spec, make_planner(spec))
+            reasons = jax_unsupported_policies([p for p, _ in self.groups])
+            if reasons:
+                raise ValueError("backend='jax' cannot express this fleet: "
+                                 + "; ".join(reasons))
+            # heterogeneous fleets share one pad width L (the largest
+            # group's max_backlog); a homogeneous fleet keeps pad_L=None so
+            # its planner spec — and compiled graph — is unchanged
+            het = len(self.groups) != 1
+            L = max(int(p.max_backlog) for p, _ in self.groups)
+            self._jax_planner = []
+            for policy, streams in self.groups:
+                spec = spec_for_policy(
+                    policy, sizes=self.sizes, acc_server=self.acc_server,
+                    deadline=self.deadline, latency=self.latency,
+                    server_time=self.server_time, pad_L=L if het else None)
+                self._jax_planner.append((spec, make_planner(spec), streams))
 
     # -- env ------------------------------------------------------------- #
 
@@ -358,26 +367,38 @@ class FleetRunner:
 
     def _plan_all_jax(self, now: np.ndarray, active: np.ndarray) -> PlanBatch:
         """Compiled planning pass: pad the (already pruned) ragged state to
-        fixed shapes, run the jitted planner, bridge back to ``PlanBatch``.
-        Decisions are pinned integer-exact to the numpy path by
-        ``tests/test_fleet_jax.py``."""
+        fixed shapes, run each group's jitted planner, bridge back to one
+        ``PlanBatch``.  Decisions are pinned integer-exact to the numpy
+        path by ``tests/test_fleet_jax.py``; heterogeneous fleets reuse the
+        numpy path's group scatter/sort machinery on the host side."""
         import jax.numpy as jnp
 
         from repro.policy.fleet_jax import fleet_from_state, plan_batch_from_out
 
-        spec, planner = self._jax_planner
-        fleet = fleet_from_state(self.state, spec.L, dtype=spec.dtype)
+        spec0 = self._jax_planner[0][0]
+        fleet = fleet_from_state(self.state, spec0.L, dtype=spec0.dtype)
+        now_j = jnp.asarray(np.where(np.isfinite(now), now, np.inf),
+                            dtype=spec0.dtype)
+        bw_j = jnp.asarray(np.maximum(self.bw_est, 1.0), dtype=spec0.dtype)
         # occupancy-aware T^o: pass the calibrated estimate as a traced
         # scalar only when it deviates from the spec's static nominal, so
         # batching-free runs keep the original (bit-pinned) compiled graph
-        st = (None if float(self.server_time) == spec.server_time
-              else jnp.asarray(self.server_time, dtype=spec.dtype))
-        out = planner(fleet,
-                      jnp.asarray(np.where(np.isfinite(now), now, np.inf),
-                                  dtype=spec.dtype),
-                      jnp.asarray(np.maximum(self.bw_est, 1.0), dtype=spec.dtype),
-                      st)
-        batch = plan_batch_from_out(out, self.n_streams, len(self.acc_server))
+        st = (None if float(self.server_time) == spec0.server_time
+              else jnp.asarray(self.server_time, dtype=spec0.dtype))
+        m = len(self.acc_server)
+        if len(self._jax_planner) == 1:
+            _, planner, _ = self._jax_planner[0]
+            out = planner(fleet, now_j, bw_j, st)
+            batch = plan_batch_from_out(out, self.n_streams, m)
+        else:
+            batch = PlanBatch.empty(self.n_streams, m)
+            for spec, planner, streams in self._jax_planner:
+                idx = jnp.asarray(streams, dtype=jnp.int32)
+                sub = type(fleet)(fleet.arrival[idx], fleet.conf[idx],
+                                  fleet.length[idx])
+                out = planner(sub, now_j[idx], bw_j[idx], st)
+                batch.scatter(streams, plan_batch_from_out(out, len(streams), m))
+            batch.sort_offloads()
         if not active.all():  # inactive streams keep PlanBatch.empty rows
             batch.theta[~active] = 0.0
             batch.resolution[~active] = len(self.acc_server) - 1

@@ -45,8 +45,8 @@ __all__ = [
     "PaddedFleet", "PlanOut", "PlannerSpec",
     "pad_fleet", "unpad_fleet", "fleet_from_state", "plan_batch_from_out",
     "prune_fleet", "consume_fleet", "extend_fleet", "clear_fleet",
-    "plan_fleet", "make_planner", "spec_for_policy", "ewma_fold",
-    "JAX_PLANNABLE",
+    "plan_fleet", "make_planner", "spec_for_policy", "planner_kind",
+    "jax_unsupported_policies", "ewma_fold", "JAX_PLANNABLE",
 ]
 
 _EPS = 1e-12  # same dominance epsilon as policy/frontier.py
@@ -127,9 +127,12 @@ def _consume_single(arr, conf, length, take, clear):
     return _compact(arr, conf, keep)
 
 
-def _extend_single(arr, conf, length, new_arr, new_conf, new_ok, mb: int):
+def _extend_single(arr, conf, length, new_arr, new_conf, new_ok, mb):
     """Append the round's new frames (slot order) then trim to the newest
-    ``mb`` — list-``observe`` semantics with static shapes."""
+    ``mb`` — list-``observe`` semantics with static shapes.  ``mb`` is a
+    static int on homogeneous fleets or a per-stream scalar (vmapped) on
+    heterogeneous ones, where groups trim to their own ``max_backlog``
+    while sharing one pad width L."""
     L = arr.shape[0]
     B = new_arr.shape[0]
     po = jnp.argsort(~new_ok)  # pack new frames, slot order preserved
@@ -162,10 +165,13 @@ def consume_fleet(fleet: PaddedFleet, take, clear) -> PaddedFleet:
     return PaddedFleet(a, c, n)
 
 
-def extend_fleet(fleet: PaddedFleet, new_arr, new_conf, new_ok, mb: int) -> PaddedFleet:
+def extend_fleet(fleet: PaddedFleet, new_arr, new_conf, new_ok, mb) -> PaddedFleet:
     """Batched ``FleetState.extend``: append each stream's (B,) new frames
-    (mask ``new_ok``, slot order) and trim to the ``mb`` newest."""
-    a, c, n = jax.vmap(_extend_single, in_axes=(0, 0, 0, 0, 0, 0, None))(
+    (mask ``new_ok``, slot order) and trim to the ``mb`` newest.  ``mb`` is
+    either one static int (homogeneous fleet) or an (S,) per-stream bound
+    (heterogeneous policy groups with distinct ``max_backlog``)."""
+    mb_ax = None if np.ndim(mb) == 0 else 0
+    a, c, n = jax.vmap(_extend_single, in_axes=(0, 0, 0, 0, 0, 0, mb_ax))(
         fleet.arrival, fleet.conf, fleet.length, new_arr, new_conf, new_ok, mb)
     return PaddedFleet(a, c, n)
 
@@ -481,36 +487,73 @@ def make_planner(spec: PlannerSpec):
                    plan_fleet(spec, fleet, now, bw, server_time))
 
 
-def spec_for_policy(policy, *, sizes, acc_server, deadline, latency,
-                    server_time, dtype=jnp.float32, F: int = 0) -> PlannerSpec:
-    """Build the static spec for one (homogeneous) policy instance.
-
-    Raises for policies the JAX path does not support — the numpy path is
-    always available for those.
-    """
+def planner_kind(policy) -> Optional[str]:
+    """Registry kind of the JAX planner that covers ``policy`` (None when
+    the compiled path has no equivalent)."""
     from repro.policy.policies import (CBOPolicy, GreedyRatePolicy, LocalPolicy,
                                        ServerPolicy, ThresholdPolicy)
 
+    for cls, kind in ((CBOPolicy, "cbo"), (ThresholdPolicy, "threshold"),
+                      (ServerPolicy, "server"), (GreedyRatePolicy, "greedy-rate"),
+                      (LocalPolicy, "local")):
+        if isinstance(policy, cls):
+            return kind
+    return None
+
+
+def jax_unsupported_policies(policies) -> list:
+    """Every reason the given policy instances (one per fleet group) cannot
+    run on ``backend="jax"`` — empty list means fully supported.  Collects
+    ALL blockers instead of raising on the first, so callers can surface
+    one complete error message (``serving.engine_jax.jax_unsupported``)."""
+    reasons = []
+    for p in policies:
+        name = type(p).__name__
+        if planner_kind(p) is None:
+            reasons.append(f"policy {name} has no JAX planner "
+                           f"(supported kinds: {', '.join(JAX_PLANNABLE)})")
+        if getattr(p, "max_backlog", None) is None:
+            reasons.append(f"policy {name}: unbounded max_backlog cannot be "
+                           "padded to fixed shapes (pass a finite max_backlog)")
+    seen: set = set()
+    return [r for r in reasons if not (r in seen or seen.add(r))]
+
+
+def spec_for_policy(policy, *, sizes, acc_server, deadline, latency,
+                    server_time, dtype=jnp.float32, F: int = 0,
+                    pad_L: Optional[int] = None) -> PlannerSpec:
+    """Build the static spec for one policy instance (one fleet group).
+
+    ``pad_L`` overrides the backlog pad width: heterogeneous fleets share
+    one (S, L) grid padded to the largest group's ``max_backlog``, while
+    each group still trims to its own bound (``extend_fleet``'s per-stream
+    ``mb``).  Raises for policies the JAX path does not support — the
+    numpy path is always available for those.
+    """
     mb = getattr(policy, "max_backlog", None)
     if mb is None:
         raise ValueError("backend='jax' needs a finite max_backlog "
                          "(fixed-shape backlogs); got None (unbounded)")
+    L = int(mb) if pad_L is None else int(pad_L)
+    if L < int(mb):
+        raise ValueError(f"pad_L={L} is below the policy's max_backlog={mb}")
     common = dict(sizes=tuple(float(x) for x in sizes),
                   acc_server=tuple(float(x) for x in acc_server),
                   deadline=float(deadline), latency=float(latency),
-                  server_time=float(server_time), L=int(mb), F=F, dtype=dtype)
-    if isinstance(policy, CBOPolicy):
+                  server_time=float(server_time), L=L, F=F, dtype=dtype)
+    kind = planner_kind(policy)
+    if kind == "cbo":
         return PlannerSpec(kind="cbo", **common)
-    if isinstance(policy, ThresholdPolicy):
+    if kind == "threshold":
         return PlannerSpec(kind="threshold", theta=policy.theta,
                            resolution=policy.resolution, **common)
-    if isinstance(policy, ServerPolicy):
+    if kind == "server":
         return PlannerSpec(kind="server", frame_interval=policy.frame_interval,
                            **common)
-    if isinstance(policy, GreedyRatePolicy):
+    if kind == "greedy-rate":
         return PlannerSpec(kind="greedy-rate", local_acc=policy.local_acc,
                            **common)
-    if isinstance(policy, LocalPolicy):
+    if kind == "local":
         return PlannerSpec(kind="local", **common)
     raise ValueError(f"backend='jax' supports policies {JAX_PLANNABLE}; "
                      f"got {type(policy).__name__}")

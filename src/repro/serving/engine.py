@@ -243,10 +243,14 @@ class MultiStreamServer:
         self.metrics = AggregateMetrics.for_streams(n_streams, uplink=self.uplink,
                                                     fabric=fabric)
         if backend == "jax":
-            # fail fast on configurations the compiled path cannot express
-            from repro.serving.engine_jax import spec_from_server
+            # fail fast on configurations the compiled path cannot express,
+            # naming every unsupported feature (shared supports_jax check)
+            from repro.serving.engine_jax import jax_unsupported
 
-            spec_from_server(self)
+            reasons = jax_unsupported(self)
+            if reasons:
+                raise ValueError("backend='jax' cannot express this "
+                                 "configuration: " + "; ".join(reasons))
 
     def process_streams(self, frames: np.ndarray,
                         labels: Optional[np.ndarray] = None,
@@ -390,13 +394,20 @@ class MultiStreamServer:
         import jax.numpy as jnp
 
         from repro.serving import engine_jax as ej
+        from repro.sharding.axes import host_shard, logical_axis_multiple
 
         cfg = self.cfg
         S, B = self.n_streams, cfg.batch_size
         resolutions = np.asarray(cfg.resolutions)
         m = len(resolutions)
         collect = "trace" if self.round_hook is not None else "metrics"
-        spec = ej.spec_from_server(self, collect=collect)
+        # under a mesh, pad the stream axis to the device multiple so the
+        # "streams" logical axis actually splits; the pad rows never see a
+        # valid frame, so every output below is sliced back to [:S]
+        mult = logical_axis_multiple("streams")
+        S_pad = -(-S // mult) * mult
+        spad = S_pad - S
+        spec = ej.spec_from_server(self, collect=collect, pad_streams=S_pad)
         params = ej.params_from_server(self, spec)
 
         # host precompute: confidences + per-resolution slow-tier
@@ -427,21 +438,38 @@ class MultiStreamServer:
                 conf = np.pad(conf, ((0, 0), (0, pad)), constant_values=np.inf)
                 fast_ok = np.pad(fast_ok, ((0, 0), (0, pad)))
                 slow_ok = np.pad(slow_ok, ((0, 0), (0, pad), (0, 0)))
+            if spad:
+                arr = np.pad(arr, ((0, spad), (0, 0)), constant_values=np.inf)
+                valid = np.pad(valid, ((0, spad), (0, 0)))
+                conf = np.pad(conf, ((0, spad), (0, 0)), constant_values=np.inf)
+                fast_ok = np.pad(fast_ok, ((0, spad), (0, 0)))
+                slow_ok = np.pad(slow_ok, ((0, spad), (0, 0), (0, 0)))
             rounds.append((arr, valid, conf, fast_ok, slow_ok))
             per_round.append((start, b))
         if not rounds:
             return self.metrics
-        inputs = ej.RoundInputs(*(jnp.asarray(np.stack(cols))
-                                  for cols in zip(*rounds)))
+        # place the stacked (R, S, B[, m]) inputs pre-split over the mesh
+        # (no-op off-mesh) so the scan reads local shards from round one
+        inputs = ej.RoundInputs(*(
+            host_shard(jnp.asarray(col), *((None, "streams", None, None)[:col.ndim]))
+            for col in (np.stack(c) for c in zip(*rounds))))
         carry, ys = ej.simulate(spec, params, inputs)
+        if carry.fp_bad is not None and bool(carry.fp_bad):
+            import warnings
+
+            warnings.warn(
+                "a time-varying uplink fixed point failed to settle inside "
+                "the compiled scan; the numpy reference would have used its "
+                "exact serial fallback — results may diverge", RuntimeWarning)
 
         # fold per-round counters/latencies into the same AggregateMetrics
-        off = np.asarray(ys.off_counts)
-        miss = np.asarray(ys.miss_counts)
-        corr = np.asarray(ys.correct)
-        lat = np.asarray(ys.lat, dtype=np.float64)
+        # (everything stream-indexed is sliced back to the real S rows)
+        off = np.asarray(ys.off_counts)[:, :S]
+        miss = np.asarray(ys.miss_counts)[:, :S]
+        corr = np.asarray(ys.correct)[:, :S]
+        lat = np.asarray(ys.lat, dtype=np.float64)[:, :S]
         for i, (start, b) in enumerate(per_round):
-            valid_i = rounds[i][1][:, :b]
+            valid_i = rounds[i][1][:S, :b]
             self.metrics.update_round(valid_i.sum(axis=1), off[i], miss[i],
                                       corr[i], lat[i][:, :b], valid_i)
 
@@ -459,10 +487,14 @@ class MultiStreamServer:
         pool.queued_seconds += np.asarray(carry.rep_queued_s, dtype=np.float64)
         pool.avg_batch = float(carry.avg_batch)  # occupancy EWMA (1.0 = serial)
         self.fabric.placement._next = int(carry.rr_next)
-        self.fleet.bw_est[:] = np.asarray(carry.bw_est, dtype=np.float64)
+        self.fleet.bw_est[:] = np.asarray(carry.bw_est, dtype=np.float64)[:S]
         from repro.policy.fleet_jax import unpad_fleet
 
-        arr_f, conf_f, lens = unpad_fleet(carry.fleet)
+        fleet_c = carry.fleet
+        if spad:  # drop the inert pad rows (always empty backlogs)
+            fleet_c = type(fleet_c)(fleet_c.arrival[:S], fleet_c.conf[:S],
+                                    fleet_c.length[:S])
+        arr_f, conf_f, lens = unpad_fleet(fleet_c)
         st = self.fleet.state
         st.arrival = arr_f.astype(np.float64)
         st.conf = conf_f.astype(np.float64)
@@ -471,26 +503,26 @@ class MultiStreamServer:
 
         if self.round_hook is not None:
             for i, (start, b) in enumerate(per_round):
-                dec = np.asarray(ys.dec[i])
+                dec = np.asarray(ys.dec[i])[:S]
                 off_s, off_p = np.nonzero(dec >= 0)
                 self.round_hook({
                     "start": start,
-                    "theta": np.asarray(ys.theta[i], dtype=np.float64),
-                    "res_idx": np.asarray(ys.res_idx[i], dtype=np.int64),
-                    "cap": np.asarray(ys.cap[i], dtype=np.int64),
-                    "n_off": np.asarray(ys.n_off[i], dtype=np.int64),
-                    "n_frames": np.asarray(ys.n_frames[i], dtype=np.int64),
+                    "theta": np.asarray(ys.theta[i], dtype=np.float64)[:S],
+                    "res_idx": np.asarray(ys.res_idx[i], dtype=np.int64)[:S],
+                    "cap": np.asarray(ys.cap[i], dtype=np.int64)[:S],
+                    "n_off": np.asarray(ys.n_off[i], dtype=np.int64)[:S],
+                    "n_frames": np.asarray(ys.n_frames[i], dtype=np.int64)[:S],
                     "off_stream": off_s.astype(np.int64),
                     "off_pos": off_p.astype(np.int64),
                     "off_res": dec[off_s, off_p].astype(np.int64),
-                    "esc": np.asarray(ys.esc[i])[:, :b],
-                    "ok": np.asarray(ys.ok[i])[:, :b],
+                    "esc": np.asarray(ys.esc[i])[:S, :b],
+                    "ok": np.asarray(ys.ok[i])[:S, :b],
                     "lat": lat[i][:, :b],
-                    "valid": rounds[i][1][:, :b],
+                    "valid": rounds[i][1][:S, :b],
                     "correct": corr[i].astype(np.int64),
-                    "bw_est": np.asarray(ys.bw_est[i], dtype=np.float64),
-                    "lengths": np.asarray(ys.lengths[i], dtype=np.int64),
-                    "overflow": np.asarray(ys.overflow[i]),
-                    "inexact": np.asarray(ys.inexact[i]),
+                    "bw_est": np.asarray(ys.bw_est[i], dtype=np.float64)[:S],
+                    "lengths": np.asarray(ys.lengths[i], dtype=np.int64)[:S],
+                    "overflow": np.asarray(ys.overflow[i])[:S],
+                    "inexact": np.asarray(ys.inexact[i])[:S],
                 })
         return self.metrics

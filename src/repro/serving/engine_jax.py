@@ -39,13 +39,15 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.policy.fleet_jax import (PaddedFleet, PlannerSpec, clear_fleet,
-                                    consume_fleet, ewma_fold, extend_fleet,
-                                    plan_fleet, prune_fleet)
+from repro.core.netsim import _FIXED_POINT_SWEEPS
+from repro.policy.fleet_jax import (PaddedFleet, PlannerSpec, PlanOut,
+                                    clear_fleet, consume_fleet, ewma_fold,
+                                    extend_fleet, plan_fleet, prune_fleet)
 from repro.sharding.axes import shard
 
-__all__ = ["EngineSpec", "EngineParams", "RoundInputs", "EngineCarry",
-           "RoundTrace", "init_carry", "make_engine", "simulate",
+__all__ = ["EngineSpec", "EngineGroup", "EngineParams", "RoundInputs",
+           "EngineCarry", "RoundTrace", "init_carry", "make_engine",
+           "simulate", "trace_lookup", "jax_unsupported", "supports_jax",
            "spec_from_server", "params_from_server"]
 
 _NEG = -jnp.inf
@@ -54,6 +56,23 @@ _NEG = -jnp.inf
 # --------------------------------------------------------------------------- #
 # static spec + pytrees
 # --------------------------------------------------------------------------- #
+
+
+@dataclass(frozen=True)
+class EngineGroup:
+    """One policy group of a heterogeneous fleet (static).
+
+    Mirrors one ``FleetRunner.groups`` entry: the group's planner (padded
+    to the fleet-wide backlog width via ``spec_for_policy(pad_L=...)``),
+    the global stream indices it owns, and the per-policy consume/prune
+    semantics the engine otherwise reads from spec-level flags.
+    """
+
+    planner: PlannerSpec
+    streams: tuple  # global stream indices (FleetRunner group order)
+    prune: bool = True  # BacklogPolicy.prune_expired
+    oneshot: bool = False  # OneShotPolicy consume semantics
+    mb: int = 0  # the group's own max_backlog (<= planner.L)
 
 
 @dataclass(frozen=True)
@@ -81,6 +100,16 @@ class EngineSpec:
     batch_window: float = 0.0  # admission window (s)
     batch_cap: int = 0  # occupancy cap per batch; 0 = unbounded
     batch_beta: float = 0.25  # occupancy EWMA fold
+    # heterogeneous fleets: one EngineGroup per policy group; () keeps the
+    # homogeneous single-planner graph (and spec-level prune/oneshot) as-is
+    groups: tuple = ()
+    # time-varying uplinks: in-scan BandwidthTrace replay and/or counter-
+    # mode jitter.  False keeps the constant-rate Lindley graph untouched.
+    varying: bool = False
+    cell_jitter: tuple = ()  # (C,) per-cell jitter amplitude (0.0 = none)
+    cell_seed: tuple = ()  # (C,) per-cell jitter seeds
+    cell_trace: tuple = ()  # (C,) bool — cell replays a BandwidthTrace
+    cell_loop: tuple = ()  # (C,) bool — trace wraps at trace_dur
 
     @property
     def m(self) -> int:
@@ -96,15 +125,23 @@ class EngineSpec:
 
 
 class EngineParams(NamedTuple):
-    """Per-run device arrays the step closes over (not traced per round)."""
+    """Per-run device arrays the step closes over (not traced per round).
+
+    The trailing trace grids are ``None`` unless some cell replays a
+    ``BandwidthTrace`` (``spec.cell_trace``); ``None`` leaves vanish from
+    the pytree, so constant-rate runs keep the original structure.
+    """
 
     sizes: jnp.ndarray  # (m,) payload bytes per resolution
-    cell_bw: jnp.ndarray  # (C,) bytes/s (constant-rate uplinks only)
+    cell_bw: jnp.ndarray  # (C,) base bytes/s (trace cells: nominal base)
     cell_of: jnp.ndarray  # (S,) int32
     replica_st: jnp.ndarray  # (K,) per-replica service time
     stream_bw: jnp.ndarray  # (S,) nominal cell rate (scheduler normalizer)
     weights: jnp.ndarray  # (S,) scheduler weights (ones = unweighted)
     bw_init: jnp.ndarray  # (S,) EWMA prior
+    trace_t: Optional[jnp.ndarray] = None  # (C, T) breakpoints, +inf-padded
+    trace_bps: Optional[jnp.ndarray] = None  # (C, T) rates, last-repeated
+    trace_dur: Optional[jnp.ndarray] = None  # (C,) loop periods
 
 
 class RoundInputs(NamedTuple):
@@ -134,6 +171,9 @@ class EngineCarry(NamedTuple):
     missed: jnp.ndarray  # (S,) int32
     correct: jnp.ndarray  # (S,) int32
     avg_batch: jnp.ndarray  # () slow-tier occupancy EWMA (1.0 = serial)
+    # time-varying uplinks only (None leaves vanish from the pytree):
+    jit_key: Optional[jnp.ndarray] = None  # (C, 2) uint32 per-cell PRNG keys
+    fp_bad: Optional[jnp.ndarray] = None  # () bool — a fixed point never settled
 
 
 class RoundTrace(NamedTuple):
@@ -167,13 +207,19 @@ def init_carry(spec: EngineSpec, params: EngineParams) -> EngineCarry:
     # copy=True: same-dtype astype would alias params.bw_init's buffer, and
     # the engine donates its carry (make_engine) — an aliased buffer would
     # be deleted out from under params on the first step
+    extra = {}
+    if spec.varying:
+        extra["fp_bad"] = jnp.zeros((), bool)
+        if any(j > 0 for j in spec.cell_jitter):
+            extra["jit_key"] = jnp.stack(
+                [jax.random.PRNGKey(int(s)) for s in spec.cell_seed])
     return EngineCarry(
         fleet=fleet, bw_est=jnp.array(params.bw_init, dtype=dt, copy=True),
         cell_busy=z(C), cell_n=zi(C), cell_busy_s=z(C), cell_queued_s=z(C),
         rep_busy=z(K), rep_n=zi(K), rep_busy_s=z(K), rep_queued_s=z(K),
         rr_next=jnp.zeros((), jnp.int32),
         frames=zi(S), offloaded=zi(S), missed=zi(S), correct=zi(S),
-        avg_batch=jnp.ones((), dtype=dt))
+        avg_batch=jnp.ones((), dtype=dt), **extra)
 
 
 # --------------------------------------------------------------------------- #
@@ -204,6 +250,138 @@ def _lexsort2(primary, rows_sorted_by_secondary):
     secondary order — the composed-argsort form of ``np.lexsort``."""
     o = rows_sorted_by_secondary
     return o[jnp.argsort(primary[o])]
+
+
+def trace_lookup(t_grid, bps_grid, ts):
+    """Rate in effect at each time over one padded breakpoint grid — the
+    jnp mirror of ``BandwidthTrace.bandwidth_at``'s right-``searchsorted``
+    minus one.  Callers mod looping times by the period first; the +inf
+    pad breakpoints (``BandwidthTrace.grid``) never capture a finite time."""
+    idx = jnp.searchsorted(t_grid, ts, side="right") - 1
+    return bps_grid[jnp.clip(idx, 0, t_grid.shape[0] - 1)]
+
+
+def _cell_bw_at(spec: EngineSpec, params: EngineParams, c: int, key_c, ts):
+    """Instantaneous bandwidth of cell ``c`` at times ``ts`` — in-scan
+    ``Uplink.bandwidth_at``: trace replay (looping times mod the period)
+    times counter-mode jitter factors drawn at the raw integer second.
+    The factors are float32 on both backends (``_counter_jitter_factors``),
+    so host and device derive the same per-second channel bit-for-bit."""
+    dt = spec.planner.dtype
+    if spec.cell_trace[c]:
+        tm = jnp.mod(ts, params.trace_dur[c]) if spec.cell_loop[c] else ts
+        base = trace_lookup(params.trace_t[c], params.trace_bps[c], tm)
+    else:
+        base = jnp.full(ts.shape, params.cell_bw[c], dtype=dt)
+    if spec.cell_jitter[c] > 0:
+        secs = ts.astype(jnp.int32)
+        keys = jax.vmap(lambda s: jax.random.fold_in(key_c, s))(secs)
+        normals = jax.vmap(lambda k: jax.random.normal(k, dtype=jnp.float32))(keys)
+        fac = jnp.clip(jnp.float32(1.0)
+                       + jnp.float32(spec.cell_jitter[c]) * normals,
+                       jnp.float32(0.2), jnp.float32(2.0))
+        base = base * fac.astype(dt)
+    return base
+
+
+def _masked_lindley_varying(spec: EngineSpec, params: EngineParams, c: int,
+                            key_c, sub, mask, payload, busy0):
+    """Time-varying masked Lindley: each row's rate depends on its start
+    time, which depends on the previous row's end — a serial chain.
+    Mirrors ``Uplink.upload_batch``'s fixed-point iteration under jit
+    (``lax.while_loop``, same sweep cap): guess the starts, look every
+    row's rate up in one pass, re-run the Lindley recursion, repeat until
+    the starts stop moving.  The numpy path falls back to an exact serial
+    loop if the iteration never settles; that has no fixed-shape analogue,
+    so this raises the sticky ``fp_bad`` carry flag instead (the bridge
+    warns, the differential tests assert it stays clean).  Returns
+    ``(end, new_busy, wire, queued, fp_bad)``."""
+    subm = jnp.where(mask, sub, _NEG)
+    base = jnp.maximum(subm, busy0)  # eff numerator == the start guess
+
+    def sweep(starts):
+        ts = jnp.where(mask, starts, 0.0)  # guard masked +inf/-inf rows
+        bw = _cell_bw_at(spec, params, c, key_c, ts)
+        tx = jnp.where(mask, payload / bw, 0.0)
+        csum = jnp.cumsum(tx)
+        end = jax.lax.cummax(base - (csum - tx)) + csum
+        return end, tx
+
+    def settled(a, b):  # np.array_equal over the live rows
+        return (jnp.where(mask, a, 0.0) == jnp.where(mask, b, 0.0)).all()
+
+    end0, tx0 = sweep(base)
+    state0 = (jnp.ones((), jnp.int32), end0 - tx0, end0, tx0,
+              settled(end0 - tx0, base))
+
+    def cond(state):
+        i, _, _, _, conv = state
+        return ~conv & (i < _FIXED_POINT_SWEEPS)
+
+    def body(state):
+        i, starts, _, _, _ = state
+        end, tx = sweep(starts)
+        return i + 1, end - tx, end, tx, settled(end - tx, starts)
+
+    _, _, end, tx, conv = jax.lax.while_loop(cond, body, state0)
+    any_live = mask.any()
+    new_busy = jnp.where(any_live, jnp.where(mask, end, _NEG).max(), busy0)
+    wire = tx.sum()
+    queued = jnp.where(mask, jnp.clip(end - tx - subm, 0.0, None), 0.0).sum()
+    return end, new_busy, wire, queued, any_live & ~conv
+
+
+def _plan_groups(spec: EngineSpec, fleet: PaddedFleet, now, bw, st_eff):
+    """Heterogeneous control plane: gather each policy group's streams,
+    run the group's own planner, scatter the outputs back into fleet-wide
+    arrays — ``FleetRunner.plan_all``'s group loop with static index sets,
+    compiling one planner subgraph per group.  Stream order inside the
+    engine is never permuted (the SFQ/argsort tie-breaks key on global
+    stream ids); streams outside every group (S-padding) keep the
+    inactive-row defaults (dec=-1, theta=0, r°=m-1)."""
+    S, L, m = spec.n_streams, spec.planner.L, spec.m
+    dt = spec.planner.dtype
+    out = PlanOut(
+        dec=jnp.full((S, L), -1, dtype=jnp.int8),
+        theta=jnp.zeros((S,), dtype=dt),
+        resolution=jnp.full((S,), m - 1, dtype=jnp.int32),
+        n_offloads=jnp.zeros((S,), jnp.int32),
+        total_gain=jnp.zeros((S,), dtype=dt),
+        base_acc=jnp.zeros((S,), dtype=dt),
+        n_frames=fleet.length,
+        overflow=jnp.zeros((S,), bool),
+        inexact=jnp.zeros((S,), bool))
+    for g in spec.groups:
+        idx = jnp.asarray(g.streams, dtype=jnp.int32)
+        sub = PaddedFleet(fleet.arrival[idx], fleet.conf[idx], fleet.length[idx])
+        p = plan_fleet(g.planner, sub, now[idx], bw[idx], st_eff)
+        out = PlanOut(
+            dec=out.dec.at[idx].set(p.dec),
+            theta=out.theta.at[idx].set(p.theta),
+            resolution=out.resolution.at[idx].set(p.resolution),
+            n_offloads=out.n_offloads.at[idx].set(p.n_offloads),
+            total_gain=out.total_gain.at[idx].set(p.total_gain),
+            base_acc=out.base_acc.at[idx].set(p.base_acc),
+            n_frames=out.n_frames,
+            overflow=out.overflow.at[idx].set(p.overflow),
+            inexact=out.inexact.at[idx].set(p.inexact))
+    return out
+
+
+def _group_flags(spec: EngineSpec):
+    """Static per-stream (prune, oneshot, max_backlog) rows from the group
+    table; padded/ungrouped streams get (False, False, 0) — their backlogs
+    are provably empty, so every choice is a no-op."""
+    S = spec.n_streams
+    prune = np.zeros(S, dtype=bool)
+    oneshot = np.zeros(S, dtype=bool)
+    mb = np.zeros(S, dtype=np.int32)
+    for g in spec.groups:
+        ss = list(g.streams)
+        prune[ss] = g.prune
+        oneshot[ss] = g.oneshot
+        mb[ss] = g.mb
+    return prune, oneshot, mb
 
 
 def _batch_latency(spec: EngineSpec, n):
@@ -238,21 +416,30 @@ def _round_step(spec: EngineSpec, params: EngineParams,
     active = valid.any(axis=1)
     fleet = clear_fleet(carry.fleet, ~active)
 
-    # (2) control plane: prune + one batched plan (FleetRunner.plan_all)
+    # (2) control plane: prune + one batched plan (FleetRunner.plan_all);
+    # heterogeneous fleets prune per group's policy and plan group by group
     now = arr.min(axis=1)  # first valid arrival; +inf when none
-    prune_mask = active if spec.prune else jnp.zeros_like(active)
+    if spec.groups:
+        g_prune, g_oneshot, g_mb = _group_flags(spec)
+        prune_mask = active & jnp.asarray(g_prune)
+    else:
+        prune_mask = active if spec.prune else jnp.zeros_like(active)
     fleet = prune_fleet(fleet, now, spec.deadline, prune_mask)
     fleet = PaddedFleet(shard(fleet.arrival, "streams", None),
                         shard(fleet.conf, "streams", None),
                         shard(fleet.length, "streams"))
     bw_plan = jnp.maximum(carry.bw_est, 1.0)  # same dead-link floor
-    if spec.batch_kind == "none":
-        plan = plan_fleet(spec.planner, fleet, now, bw_plan)
-    else:
+    st_eff = None
+    if spec.batch_kind != "none":
         # occupancy-calibrated T^o = f(expected_batch)/expected_batch at the
         # observed occupancy EWMA (ReplicaPool.expected_server_time)
         nb = jnp.maximum(carry.avg_batch, 1.0)
         st_eff = (_batch_latency(spec, nb) / nb).astype(dt)
+    if spec.groups:
+        plan = _plan_groups(spec, fleet, now, bw_plan, st_eff)
+    elif st_eff is None:
+        plan = plan_fleet(spec.planner, fleet, now, bw_plan)
+    else:
         plan = plan_fleet(spec.planner, fleet, now, bw_plan, st_eff)
     theta = jnp.where(active, plan.theta, 0.0)
     res_idx = jnp.where(active, plan.resolution, m - 1)
@@ -298,10 +485,17 @@ def _round_step(spec: EngineSpec, params: EngineParams,
     end_tx = jnp.zeros((N,), dtype=dt)
     cell_busy, cell_n = carry.cell_busy, carry.cell_n
     cell_busy_s, cell_queued_s = carry.cell_busy_s, carry.cell_queued_s
+    fp_bad = carry.fp_bad
     for c in range(C):
         mk = m_o & (cell_o == c)
-        end_c, busy_c, wire_c, queued_c = _masked_lindley(
-            sub_o, pay_o / params.cell_bw[c], mk, cell_busy[c])
+        if spec.varying and (spec.cell_trace[c] or spec.cell_jitter[c] > 0):
+            key_c = None if carry.jit_key is None else carry.jit_key[c]
+            end_c, busy_c, wire_c, queued_c, bad_c = _masked_lindley_varying(
+                spec, params, c, key_c, sub_o, mk, pay_o, cell_busy[c])
+            fp_bad = fp_bad | bad_c
+        else:
+            end_c, busy_c, wire_c, queued_c = _masked_lindley(
+                sub_o, pay_o / params.cell_bw[c], mk, cell_busy[c])
         end_tx = jnp.where(mk, end_c, end_tx)
         cell_busy = cell_busy.at[c].set(busy_c)
         cell_n = cell_n.at[c].add(mk.sum(dtype=jnp.int32))
@@ -450,12 +644,20 @@ def _round_step(spec: EngineSpec, params: EngineParams,
     bw_est = shard(bw_est, "streams")
 
     # (10) backlog bookkeeping: consume planned offloads, extend the rest
-    if spec.oneshot:
-        fleet = clear_fleet(fleet, active)
-    else:
-        fleet = consume_fleet(fleet, dec >= 0, jnp.zeros((S,), bool))
     add = valid & ~esc
-    fleet = extend_fleet(fleet, arr, conf, add, spec.planner.L)
+    if spec.groups:
+        # mixed per-policy semantics: one consume pass takes the non-
+        # oneshot offloads and clears the oneshot streams (FleetRunner
+        # .consume), then extend trims each stream to its group's bound
+        osh = jnp.asarray(g_oneshot)
+        fleet = consume_fleet(fleet, (dec >= 0) & ~osh[:, None], osh & active)
+        fleet = extend_fleet(fleet, arr, conf, add, jnp.asarray(g_mb))
+    else:
+        if spec.oneshot:
+            fleet = clear_fleet(fleet, active)
+        else:
+            fleet = consume_fleet(fleet, dec >= 0, jnp.zeros((S,), bool))
+        fleet = extend_fleet(fleet, arr, conf, add, spec.planner.L)
 
     # (11) metrics (AggregateMetrics.update_round inputs)
     lat = jnp.full((S, B), spec.t_fast, dtype=dt)
@@ -475,7 +677,7 @@ def _round_step(spec: EngineSpec, params: EngineParams,
         offloaded=carry.offloaded + off_counts,
         missed=carry.missed + miss_counts,
         correct=carry.correct + correct_r,
-        avg_batch=avg_batch)
+        avg_batch=avg_batch, jit_key=carry.jit_key, fp_bad=fp_bad)
 
     if spec.collect == "none":
         return out, None
@@ -525,22 +727,50 @@ def simulate(spec: EngineSpec, params: EngineParams, inputs: RoundInputs,
 # --------------------------------------------------------------------------- #
 
 
-def spec_from_server(server, collect: str = "metrics") -> EngineSpec:
+def jax_unsupported(server) -> list:
+    """Every reason this ``MultiStreamServer`` cannot run on
+    ``backend="jax"`` — the one shared capability check (used by the
+    server constructor, ``FleetRunner``, and callers probing via
+    ``supports_jax``).  Returns an empty list when fully supported;
+    otherwise one entry per unsupported feature, so the error names all
+    of them instead of the first one hit."""
+    from repro.policy.fleet_jax import jax_unsupported_policies
+
+    reasons = jax_unsupported_policies([g[0] for g in server.fleet.groups])
+    for c, cell in enumerate(server.fabric.cells):
+        up = cell.uplink
+        if up.jitter > 0 and up.jitter_mode != "counter":
+            reasons.append(
+                f"cell {c}: jitter_mode='pcg' draws from a host rng the "
+                "compiled scan cannot reproduce — construct the Uplink "
+                "with jitter_mode='counter' for in-scan jitter")
+    return reasons
+
+
+def supports_jax(server) -> bool:
+    """True iff every feature of this server's configuration is
+    expressible in the compiled round scan (shared predicate; the
+    per-feature reasons come from ``jax_unsupported``)."""
+    return not jax_unsupported(server)
+
+
+def spec_from_server(server, collect: str = "metrics",
+                     pad_streams: Optional[int] = None) -> EngineSpec:
     """Build the static spec from a ``MultiStreamServer`` (validating that
-    the configuration is expressible in fixed shapes)."""
+    the configuration is expressible in fixed shapes).  ``pad_streams``
+    widens the stream axis to a device multiple for mesh sharding — the
+    extra rows never see a valid frame, so they are provably inert."""
     from repro.policy.base import OneShotPolicy
     from repro.policy.fleet_jax import spec_for_policy
 
+    reasons = jax_unsupported(server)
+    if reasons:
+        raise ValueError("backend='jax' cannot express this configuration: "
+                         + "; ".join(reasons))
     fleet = server.fleet
-    if len(fleet.groups) != 1:
-        raise ValueError("backend='jax' needs a homogeneous fleet "
-                         f"(one policy group); got {len(fleet.groups)}")
-    policy = fleet.groups[0][0]
-    for cell in server.fabric.cells:
-        up = cell.uplink
-        if up.jitter > 0 or up.trace is not None:
-            raise ValueError("backend='jax' supports constant-rate cell "
-                             "uplinks only (no jitter/trace)")
+    S = server.n_streams if pad_streams is None else int(pad_streams)
+    if S < server.n_streams:
+        raise ValueError(f"pad_streams={S} < n_streams={server.n_streams}")
     pool = server.fabric.pool
     batch_kind, batch_coeffs, batch_window, batch_cap = "none", (), 0.0, 0
     batch_beta = 0.25
@@ -555,36 +785,94 @@ def spec_from_server(server, collect: str = "metrics") -> EngineSpec:
         cap = pool.batching.cap
         batch_cap = 0 if np.isinf(cap) else int(cap)
         batch_beta = pool.batch_beta
-    planner = spec_for_policy(
-        policy, sizes=fleet.sizes, acc_server=fleet.acc_server,
-        deadline=fleet.deadline, latency=fleet.latency,
-        server_time=fleet.server_time)
+    common = dict(sizes=fleet.sizes, acc_server=fleet.acc_server,
+                  deadline=fleet.deadline, latency=fleet.latency,
+                  server_time=fleet.server_time)
+    if len(fleet.groups) == 1:
+        # homogeneous: spec-level prune/oneshot, groups=() — the exact
+        # single-planner compiled graph (snapshot goldens pin it)
+        policy = fleet.groups[0][0]
+        planner = spec_for_policy(policy, **common)
+        groups = ()
+        prune = bool(getattr(policy, "prune_expired", True))
+        oneshot = isinstance(policy, OneShotPolicy)
+    else:
+        # heterogeneous: every group shares one (S, L) grid padded to the
+        # largest max_backlog; each group trims to its own bound
+        L = max(int(p.max_backlog) for p, _ in fleet.groups)
+        groups = tuple(
+            EngineGroup(planner=spec_for_policy(p, pad_L=L, **common),
+                        streams=tuple(int(s) for s in ss),
+                        prune=bool(getattr(p, "prune_expired", True)),
+                        oneshot=isinstance(p, OneShotPolicy),
+                        mb=int(p.max_backlog))
+            for p, ss in fleet.groups)
+        planner = groups[0].planner  # shared L/m/deadline/latency/dtype
+        prune, oneshot = True, False  # unused: per-group flags govern
+    uplinks = [c.uplink for c in server.fabric.cells]
+    varying = any(u.jitter > 0 or u.trace is not None for u in uplinks)
     return EngineSpec(
-        n_streams=server.n_streams, batch=server.cfg.batch_size,
+        n_streams=S, batch=server.cfg.batch_size,
         n_cells=server.fabric.n_cells, n_replicas=server.fabric.n_replicas,
         planner=planner, placement=server.fabric.placement.policy,
         serial_replicas=server.fabric.pool.serial,
         scheduler=server.scheduler.policy,
-        prune=bool(getattr(policy, "prune_expired", True)),
-        oneshot=isinstance(policy, OneShotPolicy),
+        prune=prune, oneshot=oneshot,
         t_fast=float(server.cfg.fast_time + server.cfg.calib_time),
         bw_alpha=fleet.bw_alpha, collect=collect,
         batch_kind=batch_kind, batch_coeffs=batch_coeffs,
         batch_window=batch_window, batch_cap=batch_cap,
-        batch_beta=batch_beta)
+        batch_beta=batch_beta, groups=groups, varying=varying,
+        cell_jitter=tuple(float(u.jitter) for u in uplinks) if varying else (),
+        cell_seed=tuple(int(u.seed) for u in uplinks) if varying else (),
+        cell_trace=tuple(u.trace is not None for u in uplinks) if varying else (),
+        cell_loop=tuple(bool(u.trace.loop) if u.trace is not None else False
+                        for u in uplinks) if varying else ())
 
 
 def params_from_server(server, spec: EngineSpec) -> EngineParams:
     dt = spec.planner.dtype
+    S0 = server.n_streams
+    pad = spec.n_streams - S0
     sched_w = server.scheduler.weights
-    weights = (np.ones(server.n_streams) if sched_w is None
-               else np.asarray(sched_w, dtype=np.float64))
+    weights = np.ones(S0) if sched_w is None else np.asarray(sched_w,
+                                                             dtype=np.float64)
+
+    def pad1(a, fill):
+        # pad rows are inert (no valid frames), but keep their values
+        # finite and nonzero so no division inside the step produces nans
+        a = np.asarray(a, dtype=np.float64)
+        return a if pad == 0 else np.concatenate([a, np.full(pad, fill)])
+
+    cell_of = np.asarray(server.fabric.cell_of, dtype=np.int64)
+    if pad:
+        cell_of = np.concatenate([cell_of, np.zeros(pad, dtype=np.int64)])
+    uplinks = [c.uplink for c in server.fabric.cells]
+    extra = {}
+    if spec.varying and any(spec.cell_trace):
+        # one fixed-shape breakpoint grid per cell, padded to the longest
+        # trace; constant cells get a single all-time segment
+        T = max(len(u.trace) for u in uplinks if u.trace is not None)
+        ts, rates, durs = [], [], []
+        for u in uplinks:
+            if u.trace is not None:
+                t, bps = u.trace.grid(pad_to=T)
+                durs.append(float(u.trace.duration))
+            else:
+                t = np.r_[0.0, np.full(T - 1, np.inf)]
+                bps = np.full(T, u.bandwidth_bps)
+                durs.append(np.inf)
+            ts.append(t)
+            rates.append(bps)
+        extra = dict(trace_t=jnp.asarray(np.stack(ts), dtype=dt),
+                     trace_bps=jnp.asarray(np.stack(rates), dtype=dt),
+                     trace_dur=jnp.asarray(durs, dtype=dt))
     return EngineParams(
         sizes=jnp.asarray(server.fleet.sizes, dtype=dt),
-        cell_bw=jnp.asarray([c.uplink.bandwidth_bps for c in server.fabric.cells],
-                            dtype=dt),
-        cell_of=jnp.asarray(server.fabric.cell_of, dtype=jnp.int32),
+        cell_bw=jnp.asarray([u.bandwidth_bps for u in uplinks], dtype=dt),
+        cell_of=jnp.asarray(cell_of, dtype=jnp.int32),
         replica_st=jnp.asarray(server.fabric.pool.server_time, dtype=dt),
-        stream_bw=jnp.asarray(server._stream_bw, dtype=dt),
-        weights=jnp.asarray(weights, dtype=dt),
-        bw_init=jnp.asarray(server.fleet.bw_est, dtype=dt))
+        stream_bw=jnp.asarray(pad1(server._stream_bw, 1.0), dtype=dt),
+        weights=jnp.asarray(pad1(weights, 1.0), dtype=dt),
+        bw_init=jnp.asarray(pad1(server.fleet.bw_est, 1.0), dtype=dt),
+        **extra)

@@ -110,3 +110,41 @@ def shard(x, *axes: Optional[str]):
     used: set = set()
     spec = [_resolve(rules, d, a, used) for d, a in zip(x.shape, axes)]
     return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, PartitionSpec(*spec)))
+
+
+def logical_axis_multiple(name: str) -> int:
+    """Device count a dimension must be a multiple of to shard over the
+    logical axis ``name`` under the current rules context — the pad target
+    callers round up to (``serving/engine.py`` pads the fleet's stream
+    count to ``logical_axis_multiple("streams")``).  Returns 1 off-mesh or
+    when the axis maps to no mesh axis, so padding degenerates to a no-op
+    on a single device."""
+    ctx = getattr(_state, "ctx", None)
+    if not ctx or ctx[0] is None:
+        return 1
+    _, rules = ctx
+    mesh_ax = rules.get(name)
+    if mesh_ax is None:
+        return 1
+    axes = mesh_ax if isinstance(mesh_ax, tuple) else (mesh_ax,)
+    total = 1
+    for a in axes:
+        total *= rules["_sizes"].get(a, 1)
+    return total
+
+
+def host_shard(x, *axes: Optional[str]):
+    """``device_put`` a host array with the resolved sharding for its
+    logical axes — the input-side companion to ``shard`` (which constrains
+    traced values).  Placing the big (R, S, B) round inputs this way means
+    the compiled step receives them already split across devices instead
+    of broadcast-then-resharded.  No-op off-mesh."""
+    ctx = getattr(_state, "ctx", None)
+    if not ctx or ctx[0] is None:
+        return x
+    mesh, rules = ctx
+    if len(axes) != x.ndim:
+        raise ValueError(f"host_shard(): got {len(axes)} axes for rank-{x.ndim} array")
+    used: set = set()
+    spec = [_resolve(rules, d, a, used) for d, a in zip(x.shape, axes)]
+    return jax.device_put(x, NamedSharding(mesh, PartitionSpec(*spec)))

@@ -76,11 +76,17 @@ def assert_round_equal(numpy_rec: dict, jax_rec: dict, *, ctx="",
 
 def make_server(backend: str, *, S: int, policy="cbo", scheduler="round_robin",
                 topology="degenerate", placement="jsq", frame_rate=32.0,
-                bw_mbps=50.0, seed=0):
+                bw_mbps=50.0, seed=0, jitter=0.0, jitter_mode="counter",
+                traces=None):
     """One ``MultiStreamServer`` on the canonical differential config.
 
     ``frame_rate=32`` keeps the arrival grid exactly representable in
     float32 — a deliberate part of the exactness policy, not an accident.
+    ``policy`` passes through to the server (a registry name or a
+    per-stream factory for heterogeneous fleets); ``jitter``/``traces``
+    make the cell uplinks time-varying (``traces`` is a sequence cycled
+    over the cells; ``jitter_mode="counter"`` is the jax-expressible
+    default — pass ``"pcg"`` to exercise the legacy host rng).
     """
     from repro.core.netsim import Uplink, mbps
     from repro.net import EdgeFabric, ReplicaPool
@@ -90,13 +96,19 @@ def make_server(backend: str, *, S: int, policy="cbo", scheduler="round_robin",
     fast, slow, cal = synthetic_tiers()
     cfg = ServeConfig(resolutions=(4, 8), acc_server=(0.7, 0.99), batch_size=16,
                       frame_rate=frame_rate, deadline=0.2)
+
+    def trace_of(c):
+        return traces[c % len(traces)] if traces else None
+
     if topology == "degenerate":
         fab = EdgeFabric.degenerate(
             Uplink(bandwidth_bps=mbps(bw_mbps), latency=0.05,
-                   server_time=cfg.server_time), n_streams=S)
+                   server_time=cfg.server_time, jitter=jitter, seed=seed,
+                   jitter_mode=jitter_mode, trace=trace_of(0)), n_streams=S)
     else:  # C=2 cells, K=2 heterogeneous serial replicas
         ups = [Uplink(bandwidth_bps=mbps(bw_mbps * 0.6), latency=0.05,
-                      server_time=cfg.server_time, seed=seed + c)
+                      server_time=cfg.server_time, seed=seed + c,
+                      jitter=jitter, jitter_mode=jitter_mode, trace=trace_of(c))
                for c in range(2)]
         pool = ReplicaPool(2, np.array([cfg.server_time, cfg.server_time * 1.5]),
                            serial=True)
@@ -108,7 +120,8 @@ def make_server(backend: str, *, S: int, policy="cbo", scheduler="round_robin",
 
 def run_differential(*, S: int, policy="cbo", scheduler="round_robin",
                      topology="degenerate", placement="jsq", churn=False,
-                     n_frames=64, seed=0, frame_rate=32.0, bw_mbps=50.0):
+                     n_frames=64, seed=0, frame_rate=32.0, bw_mbps=50.0,
+                     jitter=0.0, jitter_mode="counter", traces=None):
     """Replay one seeded workload through both backends and assert every
     round record matches.  Returns (numpy_metrics, jax_metrics)."""
     from repro.serving.events import ArrivalSchedule
@@ -127,7 +140,9 @@ def run_differential(*, S: int, policy="cbo", scheduler="round_robin",
     for backend in ("numpy", "jax"):
         srv, cfg = make_server(backend, S=S, policy=policy, scheduler=scheduler,
                                topology=topology, placement=placement,
-                               frame_rate=frame_rate, bw_mbps=bw_mbps, seed=seed)
+                               frame_rate=frame_rate, bw_mbps=bw_mbps, seed=seed,
+                               jitter=jitter, jitter_mode=jitter_mode,
+                               traces=traces)
         recs = []
         srv.round_hook = recs.append
         metrics[backend] = srv.process_streams(imgs, labels, schedule=sched)

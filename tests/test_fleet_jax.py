@@ -21,6 +21,8 @@ from __future__ import annotations
 
 import json
 import os
+import subprocess
+import sys
 
 import numpy as np
 import pytest
@@ -117,6 +119,37 @@ def test_planner_parity_tie_heavy(policy):
                           ctx=f"tie-heavy {policy} seed={seed}")
 
 
+def test_planner_parity_heterogeneous():
+    # mixed fleet: three policy kinds with DIFFERENT max_backlogs, so the
+    # jax path must pad every group to the widest L and trim per stream
+    from repro.core.netsim import png_size_model
+    from repro.policy.fleet import FleetRunner
+    from repro.policy.registry import make_policy
+
+    mix = (("cbo", 12), ("threshold", 8), ("greedy-rate", 10))
+
+    def runner(backend, S):
+        pols = [make_policy(name, max_backlog=mb)
+                for name, mb in (mix[i % len(mix)] for i in range(S))]
+        return FleetRunner(pols, resolutions=(4, 8), acc_server=(0.7, 0.99),
+                           deadline=0.2, latency=0.05, server_time=0.037,
+                           size_of=png_size_model, bw_init=50e6 / 8,
+                           backend=backend)
+
+    for S in (3, 9):
+        for seed in range(3):
+            rn, rj = runner("numpy", S), runner("jax", S)
+            stream, arrival, conf, now, bw, active = fuzz_backlog(
+                S, 12, 4200 + 10 * S + seed)
+            for r in (rn, rj):
+                r.observe_frames(stream, arrival, conf)
+                r.bw_est[:] = bw
+            pn = rn.plan_all(now, active)
+            pj = rj.plan_all(now, active)
+            assert_plan_equal(pn, pj, ctx=f"het S={S} seed={seed}")
+            assert_fleet_equal(rn.state, rj.state)
+
+
 def test_runner_backend_validation():
     from repro.core.netsim import png_size_model
     from repro.policy.fleet import FleetRunner
@@ -126,14 +159,20 @@ def test_runner_backend_validation():
                   latency=0.05, server_time=0.037, size_of=png_size_model)
     with pytest.raises(ValueError, match="backend"):
         FleetRunner([make_policy("cbo", max_backlog=8)], backend="torch", **common)
-    # heterogeneous fleets have >1 policy group: numpy-only
-    with pytest.raises(ValueError, match="homogeneous"):
-        FleetRunner([make_policy("cbo", max_backlog=8),
-                     make_policy("threshold", max_backlog=8)],
-                    backend="jax", **common)
+    # heterogeneous fleets segment per policy group: supported since the
+    # sharded scale-out, so mixing plannable kinds must construct cleanly
+    FleetRunner([make_policy("cbo", max_backlog=8),
+                 make_policy("threshold", max_backlog=8)],
+                backend="jax", **common)
     # unbounded backlogs cannot be padded to fixed shapes
     with pytest.raises(ValueError, match="max_backlog"):
         FleetRunner([make_policy("cbo", max_backlog=None)], backend="jax", **common)
+    # a policy with no JAX planner AND no bound: the error lists EVERY
+    # reason (the "optimal" offline DP trips both at once)
+    with pytest.raises(ValueError) as ei:
+        FleetRunner([make_policy("optimal")], backend="jax", **common)
+    assert "no JAX planner" in str(ei.value)
+    assert "max_backlog" in str(ei.value)
 
 
 # --------------------------------------------------------------------- #
@@ -159,6 +198,50 @@ def test_round_loop_parity_churn(topology):
     run_differential(S=3, topology=topology, churn=True, seed=5)
 
 
+def test_round_loop_parity_heterogeneous():
+    # per-stream policy factory => >1 group => the engine's segmented
+    # per-group planning must match the numpy group-merge path round-for-round
+    mix = ("cbo", "threshold", "greedy-rate")
+    run_differential(S=6, policy=lambda i: mix[i % len(mix)], seed=11)
+
+
+def test_round_loop_parity_heterogeneous_fabric():
+    mix = ("cbo", "threshold")
+    run_differential(S=4, policy=lambda i: mix[i % len(mix)],
+                     topology="fabric", seed=12)
+
+
+@pytest.mark.parametrize("topology", ["degenerate", "fabric"])
+def test_round_loop_parity_jitter(topology):
+    # counter-mode jitter: the PRNG-keyed factors are drawn inside the scan
+    # and must reproduce the host rng's draws bit-for-bit (same fold_in
+    # chain), so integer decisions stay exact
+    run_differential(S=3, topology=topology, jitter=0.3,
+                     jitter_mode="counter", seed=7)
+
+
+def test_round_loop_parity_trace():
+    # square-wave trace with a 1.5 s loop period: the ~2 s workload crosses
+    # regime boundaries AND wraps the loop, all inside the compiled scan
+    from repro.net.traces import regime_shift_trace
+
+    tr = regime_shift_trace(levels_mbps=(20.0, 4.0), period=0.75, loop=True)
+    run_differential(S=3, traces=[tr], seed=13)
+
+
+def test_round_loop_parity_trace_fabric():
+    # two cells on different traces; one also jittered — trace lookup and
+    # counter jitter compose multiplicatively in-scan
+    from repro.net.traces import regime_shift_trace
+
+    trs = [regime_shift_trace(levels_mbps=(25.0, 6.0), period=0.75, loop=True),
+           regime_shift_trace(levels_mbps=(12.0, 30.0, 8.0), period=0.5,
+                              loop=True)]
+    run_differential(S=4, topology="fabric", traces=trs, seed=14)
+    run_differential(S=3, topology="fabric", traces=trs, jitter=0.2,
+                     jitter_mode="counter", seed=15)
+
+
 def test_post_run_fleet_state_parity():
     # after a full replay, the residual backlog state (rebuilt from the
     # padded arrays by the jax engine's fold-back) matches the numpy one
@@ -174,21 +257,37 @@ def test_post_run_fleet_state_parity():
 
 
 def test_server_backend_fail_fast():
-    # unsupported fabric configs must raise at construction, not mid-run
+    # unsupported fabric configs must raise at construction, not mid-run —
+    # and the shared ``supports_jax`` predicate must agree with the raise
     from repro.core.netsim import Uplink, mbps
     from repro.net import EdgeFabric
     from repro.serving import MultiStreamServer, ServeConfig
+    from repro.serving.engine_jax import jax_unsupported, supports_jax
     from repro.serving.synthetic import synthetic_tiers
 
     fast, slow, cal = synthetic_tiers()
     cfg = ServeConfig(resolutions=(4, 8), acc_server=(0.7, 0.99),
                       frame_rate=32.0, deadline=0.2)
-    up = Uplink(bandwidth_bps=mbps(50.0), latency=0.05,
-                server_time=cfg.server_time, jitter=0.3, seed=0)
-    with pytest.raises(ValueError):
-        MultiStreamServer(cfg, fast, slow, cal, None, n_streams=2,
-                          fabric=EdgeFabric.degenerate(up, n_streams=2),
-                          backend="jax")
+
+    def server(backend, **up_kw):
+        up = Uplink(bandwidth_bps=mbps(50.0), latency=0.05,
+                    server_time=cfg.server_time, seed=0, **up_kw)
+        return MultiStreamServer(cfg, fast, slow, cal, None, n_streams=2,
+                                 fabric=EdgeFabric.degenerate(up, n_streams=2),
+                                 backend=backend)
+
+    # legacy "pcg" jitter draws from a host rng the compiled scan cannot
+    # reproduce — construction must raise and name the fix
+    with pytest.raises(ValueError, match="jitter_mode"):
+        server("jax", jitter=0.3)
+    # ...but the numpy backend still accepts it, and the predicate reports
+    # the same verdict the constructor enforces
+    srv = server("numpy", jitter=0.3)
+    assert not supports_jax(srv)
+    assert any("counter" in r for r in jax_unsupported(srv))
+    # counter-mode jitter is expressible in-scan: constructs fine
+    srv = server("jax", jitter=0.3, jitter_mode="counter")
+    assert supports_jax(srv) and jax_unsupported(srv) == []
 
 
 # --------------------------------------------------------------------- #
@@ -238,3 +337,61 @@ def test_engine_under_local_mesh():
     assert meshed.n_offloaded == base.n_offloaded
     assert meshed.n_deadline_miss == base.n_deadline_miss
     assert meshed.accuracy == base.accuracy
+
+
+# --------------------------------------------------------------------- #
+# multi-device parity: 8 forced host devices, streams axis really sharded
+# --------------------------------------------------------------------- #
+
+REPO = os.path.join(os.path.dirname(__file__), "..")
+
+# subprocess because --xla_force_host_platform_device_count must land
+# before jax imports (conftest pins the parent to a single CPU device)
+MULTI_DEVICE_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import sys
+sys.path.insert(0, "tests")
+import jax
+assert len(jax.devices()) == 8, jax.devices()
+from _diff import make_server
+from repro.launch.mesh import make_streams_mesh
+from repro.sharding.axes import sharding_ctx
+from repro.serving.synthetic import synthetic_streams
+
+S = 6  # NOT a multiple of 8: exercises stream padding under the mesh
+imgs, labels = synthetic_streams(S, 32, seed=3)
+
+def run(backend, mesh=None, **kw):
+    srv, _ = make_server(backend, S=S, topology="fabric", **kw)
+    if mesh is None:
+        agg = srv.process_streams(imgs, labels)
+    else:
+        with sharding_ctx(mesh):
+            agg = srv.process_streams(imgs, labels)
+    return dict(n_frames=int(agg.n_frames), n_off=int(agg.n_offloaded),
+                n_miss=int(agg.n_deadline_miss), acc=float(agg.accuracy))
+
+out = {"numpy": run("numpy"), "jax1": run("jax"),
+       "jax8": run("jax", make_streams_mesh(8))}
+jit = dict(jitter=0.25, jitter_mode="counter")
+out["numpy_jit"] = run("numpy", **jit)
+out["jax8_jit"] = run("jax", make_streams_mesh(8), **jit)
+print("JSON" + json.dumps(out))
+"""
+
+
+def test_multi_device_round_loop_parity():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", MULTI_DEVICE_SCRIPT],
+                          capture_output=True, text=True, env=env, cwd=REPO,
+                          timeout=900)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    payload = [l for l in proc.stdout.splitlines() if l.startswith("JSON")][0][4:]
+    out = json.loads(payload)
+    # multi-device == single-device == numpy, decision-for-decision
+    assert out["jax8"] == out["jax1"] == out["numpy"], out
+    # ...and with in-scan counter jitter active under the mesh
+    assert out["jax8_jit"] == out["numpy_jit"], out

@@ -109,6 +109,63 @@ def test_from_mbps_converts_units():
 
 
 # --------------------------------------------------------------------- #
+# numpy <-> jax parity: the padded grid + in-scan searchsorted lookup
+# --------------------------------------------------------------------- #
+
+def _jax_lookup(tr, ts, pad_to=None):
+    """Replicate what the compiled engine does per cell: padded grid,
+    ``jnp.mod`` wraparound when looping, right-searchsorted minus one —
+    all in float32, the engine's working precision (query times below are
+    f32-exact per the exactness policy, so results must be bit-equal)."""
+    import jax.numpy as jnp
+
+    from repro.serving.engine_jax import trace_lookup
+
+    t, bps = tr.grid(pad_to=pad_to)
+    tj = jnp.asarray(ts, dtype=jnp.float32)
+    if tr.loop:
+        tj = jnp.mod(tj, jnp.float32(tr.duration))
+    return np.asarray(trace_lookup(jnp.asarray(t, dtype=jnp.float32),
+                                   jnp.asarray(bps, dtype=jnp.float32), tj))
+
+
+@pytest.mark.parametrize("pad_to", [None, 7])
+def test_jax_lookup_matches_numpy_boundaries(pad_to):
+    # exact breakpoints, f32-exact just-below values, pre-zero clamp, far
+    # future — the padded +inf breakpoints must never capture a finite time
+    tr = BandwidthTrace(t=np.asarray([0.0, 1.0, 3.0]),
+                        bps=np.asarray([10.0, 20.0, 30.0]))
+    ts = np.asarray([-0.5, 0.0, 0.5, 0.96875, 1.0, 2.96875, 3.0, 100.0])
+    np.testing.assert_array_equal(_jax_lookup(tr, ts, pad_to=pad_to),
+                                  tr.bandwidth_at(ts))
+
+
+def test_jax_lookup_matches_numpy_wraparound():
+    tr = BandwidthTrace(t=np.asarray([0.0, 1.0]), bps=np.asarray([10.0, 20.0]),
+                        loop=True, duration=2.0)
+    ts = np.asarray([0.5, 1.5, 2.0, 3.0, 3.5, 4.0, 17.25])
+    np.testing.assert_array_equal(_jax_lookup(tr, ts),
+                                  tr.bandwidth_at(ts))
+
+
+def test_jax_lookup_matches_numpy_regime_shift():
+    tr = regime_shift_trace((20.0, 2.0), period=0.75, loop=True)
+    # a dense f32-representable grid spanning several loop periods
+    ts = np.arange(0, 256) / 32.0
+    np.testing.assert_array_equal(_jax_lookup(tr, ts, pad_to=5),
+                                  tr.bandwidth_at(ts))
+
+
+def test_grid_padding_validates():
+    tr = regime_shift_trace((20.0, 2.0))
+    t, bps = tr.grid(pad_to=6)
+    assert t.shape == bps.shape == (6,)
+    assert np.isinf(t[2:]).all() and (bps[2:] == bps[1]).all()
+    with pytest.raises(ValueError, match="pad_to"):
+        tr.grid(pad_to=1)
+
+
+# --------------------------------------------------------------------- #
 # generators: deterministic per seed, distinct across seeds
 # --------------------------------------------------------------------- #
 
