@@ -27,7 +27,6 @@ fabric (``src/repro/net/``) instead of the legacy single uplink — see
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import sys
 
@@ -166,10 +165,9 @@ def run(args=None) -> dict:
                       "cells": args.cells, "replicas": args.replicas,
                       "placement": args.placement},
            "sweep": rows, "single_stream_ref": single_row}
-    from benchmarks.common import out_path
+    from benchmarks.common import emit_bench_json
 
-    with open(out_path("multistream_sweep.json"), "w") as f:
-        json.dump(out, f, indent=2)
+    emit_bench_json("BENCH_multistream.json", out, mirror="multistream_sweep.json")
     return out
 
 

@@ -9,7 +9,6 @@ and records old-vs-new wall time + speedup.  Run directly or via
 """
 from __future__ import annotations
 
-import json
 import os
 import sys
 import time
@@ -69,11 +68,11 @@ def run(repeats: int = 15) -> dict:
         rows.append(row)
         print(f"bench_policy_planner,{name},ref_us={row['ref_us']},"
               f"vec_us={row['vec_us']},speedup={row['speedup']}", flush=True)
-    from benchmarks.common import out_path
+    from benchmarks.common import emit_bench_json
 
-    with open(out_path("policy_planner.json"), "w") as f:
-        json.dump(rows, f, indent=2)
-    return {"rows": rows}
+    out = {"rows": rows}
+    emit_bench_json("BENCH_planner.json", out, mirror="policy_planner.json")
+    return out
 
 
 if __name__ == "__main__":

@@ -136,11 +136,16 @@ class EdgeFabric:
 
     # -- data plane --------------------------------------------------------- #
 
-    def transmit(self, stream, payload_bytes, t_submit) -> np.ndarray:
+    def transmit(self, stream, payload_bytes, t_submit, *,
+                 service_scale=None) -> np.ndarray:
         """Route one round's escalations: per-cell uplink upload (rows keep
         their scheduler order within each cell), replica placement on the
         upload-completion times, pool service, reply latency.  Returns
-        reply-land times aligned with the input rows."""
+        reply-land times aligned with the input rows.
+
+        ``service_scale`` (optional, per-row) scales each job's replica
+        service time — split-computation offloads run only the model suffix
+        server-side (``srv_frac``); 1.0 rows are a float no-op."""
         stream = np.asarray(stream, dtype=np.int64)
         payloads = np.asarray(payload_bytes, dtype=np.float64)
         subs = np.asarray(t_submit, dtype=np.float64)
@@ -154,7 +159,7 @@ class EdgeFabric:
             if len(rows):
                 end_tx[rows] = cell.uplink.upload_batch(payloads[rows], subs[rows])
         replica = self.placement.assign(self.pool, end_tx)
-        done = self.pool.process(end_tx, replica)
+        done = self.pool.process(end_tx, replica, service_scale=service_scale)
         # batched service reports the member's whole-batch f(n); without
         # batching this is exactly server_time[replica] as before
         self.last_service_time = self.pool.last_service

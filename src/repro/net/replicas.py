@@ -84,7 +84,7 @@ class ReplicaPool:
         replicas — the decision plane's congestion observable."""
         return float(np.clip(self.busy_until - now, 0.0, None).mean())
 
-    def process(self, t_arrive, replica) -> np.ndarray:
+    def process(self, t_arrive, replica, *, service_scale=None) -> np.ndarray:
         """Serve one batch: each request lands on ``replica[i]`` when its
         upload finishes at ``t_arrive[i]``; returns service-completion
         times (reply latency is the fabric's concern, not the pool's).
@@ -96,6 +96,13 @@ class ReplicaPool:
         ``busy_until``.  With live (non-degenerate) ``batching``, requests
         are instead grouped into admission-window batches and each batch
         costs f(n) (``repro.slowtier.form_batches``).
+
+        ``service_scale`` (optional, per-request) multiplies each job's
+        service time — split-computation offloads run only a suffix of the
+        model, so their cost is ``srv_frac * server_time``.  Scale 1.0 is a
+        float no-op, so frame-only batches stay bit-for-bit.  Live batching
+        shares one f(n) across a batch and cannot price per-request
+        suffixes; mixing the two is rejected.
         """
         t_arrive = np.asarray(t_arrive, dtype=np.float64)
         replica = np.asarray(replica, dtype=np.int64)
@@ -107,6 +114,15 @@ class ReplicaPool:
         if (replica < 0).any() or (replica >= self.n_replicas).any():
             raise ValueError("replica id out of range")
         st = self.server_time[replica]
+        if service_scale is not None:
+            scale = np.broadcast_to(
+                np.asarray(service_scale, dtype=np.float64), t_arrive.shape)
+            if self._batching_live and (scale != 1.0).any():
+                raise ValueError(
+                    "per-request service_scale (split offloading) is not "
+                    "supported with continuous batching — batches share one "
+                    "f(n) latency curve")
+            st = st * scale
         if self._batching_live:
             return self._process_batched(t_arrive, replica)
         if not self.serial:  # infinite-capacity fixed delay (paper semantics)

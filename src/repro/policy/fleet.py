@@ -265,8 +265,10 @@ class FleetRunner:
     def __init__(self, policies: Sequence, *, resolutions: tuple, acc_server: tuple,
                  deadline: float, latency: float, server_time: float, size_of,
                  bw_init: float | np.ndarray = 1e6, bw_alpha: float = 0.3,
-                 cell_id: np.ndarray | None = None, backend: str = "numpy"):
+                 cell_id: np.ndarray | None = None, backend: str = "numpy",
+                 actions=None):
         from repro.core.netsim import payload_sizes
+        from repro.policy.types import ActionTable
 
         self.policies = list(policies)
         S = len(self.policies)
@@ -282,7 +284,22 @@ class FleetRunner:
         # amortized estimate — identical to the nominal without batching
         self.occupancy = 1.0
         self.queue_depth = 0.0
-        self.sizes = payload_sizes(size_of, np.asarray(self.resolutions))
+        # THE action→bytes table: one source of truth for planner-assumed
+        # and engine-transmitted payloads (numpy and jax alike).  With no
+        # split actions the table is the legacy (m,) resolution grid and
+        # ``self.actions`` stays None so every frame-only code path — and
+        # its pinned snapshots — is untouched.
+        if actions is None:
+            actions = ActionTable.frames_only(
+                sizes=payload_sizes(size_of, np.asarray(self.resolutions)),
+                acc=np.asarray(self.acc_server, dtype=np.float64))
+        if actions.n_frame_actions != len(self.resolutions):
+            raise ValueError(
+                f"action table has {actions.n_frame_actions} frame actions "
+                f"but {len(self.resolutions)} resolutions")
+        self.action_table = actions
+        self.actions = actions if actions.has_splits else None
+        self.sizes = actions.sizes[:actions.n_frame_actions]
         self.bw_alpha = float(bw_alpha)
         # under an edge fabric, ``bw_init`` is the (S,) per-cell prior and
         # each stream's EWMA tracks its own cell's uplink from then on
@@ -319,7 +336,8 @@ class FleetRunner:
                 spec = spec_for_policy(
                     policy, sizes=self.sizes, acc_server=self.acc_server,
                     deadline=self.deadline, latency=self.latency,
-                    server_time=self.server_time, pad_L=L if het else None)
+                    server_time=self.server_time, pad_L=L if het else None,
+                    actions=self.actions)
                 self._jax_planner.append((spec, make_planner(spec), streams))
 
     # -- env ------------------------------------------------------------- #
@@ -331,7 +349,8 @@ class FleetRunner:
                         server_time=self.server_time, deadline=self.deadline,
                         acc_server=self.acc_server, sizes=self.sizes,
                         cell_id=self.state.cell_id,
-                        occupancy=self.occupancy, queue_depth=self.queue_depth)
+                        occupancy=self.occupancy, queue_depth=self.queue_depth,
+                        actions=self.actions)
 
     def env(self, s: int) -> Env:
         return self.env_batch().for_stream(s)
@@ -363,7 +382,7 @@ class FleetRunner:
             batch.scatter(sel, pb)
         batch.sort_offloads()
         batch.planned = active.copy()
-        return batch
+        return batch.annotate_actions(self.actions)
 
     def _plan_all_jax(self, now: np.ndarray, active: np.ndarray) -> PlanBatch:
         """Compiled planning pass: pad the (already pruned) ragged state to
@@ -409,9 +428,11 @@ class FleetRunner:
             batch.off_stream = batch.off_stream[sel]
             batch.off_pos = batch.off_pos[sel]
             batch.off_res = batch.off_res[sel]
+            batch.off_kind = batch.off_kind[sel]
+            batch.off_cut = batch.off_cut[sel]
         batch.n_frames = self.state.lengths.copy()
         batch.planned = active.copy()
-        return batch
+        return batch.annotate_actions(self.actions)
 
     def consume(self, batch: PlanBatch) -> int:
         """Planned offloads left the device; one-shot streams clear fully."""

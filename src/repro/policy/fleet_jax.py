@@ -204,10 +204,21 @@ class PlannerSpec:
     frame_interval: float = 1.0 / 30.0  # server policy
     local_acc: float = 0.5  # greedy-rate policy
     dtype: object = jnp.float32
+    # split-computation actions appended after the m frame actions
+    # (repro.split / policy.types.ActionTable).  Empty tuples keep every
+    # frame-only code path — and its compiled graph — untouched.
+    split_sizes: tuple = ()  # payload bytes per split action
+    split_acc: tuple = ()  # server accuracy per split action
+    split_t_dev: tuple = ()  # device prefix seconds per split action
+    split_srv_frac: tuple = ()  # fraction of T^o the suffix costs
 
     @property
     def m(self) -> int:
         return len(self.acc_server)
+
+    @property
+    def n_actions(self) -> int:
+        return self.m + len(self.split_sizes)
 
     @property
     def rtt(self) -> float:
@@ -215,7 +226,7 @@ class PlannerSpec:
 
     @property
     def frontier(self) -> int:
-        return self.F if self.F > 0 else 1 + self.L * self.m
+        return self.F if self.F > 0 else 1 + self.L * self.n_actions
 
 
 class PlanOut(NamedTuple):
@@ -330,7 +341,14 @@ def _plan_cbo_single(arr, conf, length, now, bw, st, spec: PlannerSpec):
       * instead of a node pool, every frontier state carries its full
         decision row (``(F, L)`` int8): survivors copy their parent's row
         and stamp their own (slot, resolution) — reconstruction-free.
+
+    Split action tables dispatch to ``_plan_cbo_actions`` (the same DP over
+    the enlarged {frame@res} ∪ {features@cut} grid); the frame-only body
+    below stays byte-identical so its compiled graph — and the snapshot
+    goldens pinned to it — never changes.
     """
+    if spec.split_sizes:
+        return _plan_cbo_actions(arr, conf, length, now, bw, st, spec)
     L, m, F = spec.L, spec.m, spec.frontier
     dt = arr.dtype
     rtt = st + spec.latency
@@ -396,6 +414,91 @@ def _plan_cbo_single(arr, conf, length, now, bw, st, spec: PlannerSpec):
         0, L, body, (f_t, f_gain, f_valid, f_dec,
                      jnp.asarray(False), jnp.asarray(False)))
     best = jnp.argmax(jnp.where(f_valid, f_gain, neg))  # first max, np.argmax order
+    gain = jnp.where(f_valid[best], f_gain[best], 0.0)
+    return f_dec[best], gain, overflow, inexact
+
+
+def _plan_cbo_actions(arr, conf, length, now, bw, st, spec: PlannerSpec):
+    """``cbo_plan`` over the full action grid — ``_plan_cbo_single`` with
+    per-action columns instead of per-resolution ones (the jnp mirror of
+    ``frontier._action_vectors``):
+
+      * payload/accuracy become (A,) vectors (frames first, splits after);
+      * a split action's upload leaves the device only after the prefix
+        runs: effective start ``max(f_t, arr_j + t_dev[a])``;
+      * its reply pays only the model suffix: per-action
+        ``rtt[a] = st * srv_frac[a] + latency`` (frames: ``* 1.0``);
+      * static feasibility subtracts ``t_dev`` too — the transmission must
+        fit even when the uplink is idle at the *effective* ready time.
+
+    Decision rows store ACTION indices (int8 — ``spec_for_policy`` bounds
+    A at 127); frame actions occupy [0, m) so downstream consumers index
+    shared action tables directly.
+    """
+    L, A, F = spec.L, spec.n_actions, spec.frontier
+    dt = arr.dtype
+    sizes = jnp.asarray(spec.sizes + spec.split_sizes, dtype=dt)
+    acc = jnp.asarray(spec.acc_server + spec.split_acc, dtype=dt)
+    t_dev = jnp.asarray((0.0,) * spec.m + spec.split_t_dev, dtype=dt)
+    srv_frac = jnp.asarray((1.0,) * spec.m + spec.split_srv_frac, dtype=dt)
+    rtt = st * srv_frac + spec.latency  # (A,)
+    tx = sizes / bw  # (A,)
+    static_t = tx <= spec.deadline - rtt - t_dev  # (A,)
+    valid = jnp.arange(L) < length
+    order = jnp.argsort(-jnp.where(valid, conf, -jnp.inf))
+
+    eps = jnp.asarray(_EPS, dtype=dt)
+    neg = jnp.asarray(-jnp.inf, dtype=dt)
+    cand_parent = jnp.concatenate([jnp.arange(F), jnp.repeat(jnp.arange(F), A)])
+    cand_res = jnp.concatenate([jnp.full((F,), -1, dtype=jnp.int32),
+                                jnp.tile(jnp.arange(A, dtype=jnp.int32), F)])
+
+    def body(d, carry):
+        f_t, f_gain, f_valid, f_dec, overflow, inexact = carry
+        j = order[d]
+        arr_j, conf_j = arr[j], conf[j]
+        live = d < length
+        feas_j = static_t & (acc > conf_j) & live  # (A,)
+        start = jnp.maximum(f_t[:, None], arr_j + t_dev[None, :])  # (F, A)
+        t_exp = start + tx[None, :]  # (F, A)
+        g_exp = f_gain[:, None] + (acc - conf_j)[None, :]
+        ok_exp = (f_valid[:, None] & feas_j[None, :]
+                  & (t_exp + rtt[None, :] <= arr_j + spec.deadline))
+        cand_t = jnp.concatenate([f_t, t_exp.reshape(-1)])
+        cand_g = jnp.concatenate([f_gain, g_exp.reshape(-1)])
+        cand_ok = jnp.concatenate([f_valid, ok_exp.reshape(-1)])
+        tkey = jnp.where(cand_ok, cand_t, jnp.inf)
+        gkey = jnp.where(cand_ok, cand_g, neg)
+        o = jnp.argsort(-gkey)
+        o = o[jnp.argsort(tkey[o])]
+        ts, gs, oks = tkey[o], gkey[o], cand_ok[o]
+        run = jax.lax.cummax(gs)
+        prev_all = jnp.concatenate([neg[None], run[:-1]])
+        keep = oks & (gs > prev_all + eps)
+        kept_bar = jax.lax.cummax(jnp.where(keep, gs, neg))
+        prev_kept = jnp.concatenate([neg[None], kept_bar[:-1]])
+        inexact = inexact | (oks & ~keep & (gs > prev_kept + eps)).any()
+        overflow = overflow | (keep.sum() > F)
+        sel = jnp.argsort(~keep)[:F]
+        new_valid = keep[sel]
+        new_t = jnp.where(new_valid, ts[sel], jnp.inf).astype(dt)
+        new_g = jnp.where(new_valid, gs[sel], neg)
+        src = o[sel]
+        par, res = cand_parent[src], cand_res[src]
+        dec_par = f_dec[par]
+        col = dec_par[jnp.arange(F), j]
+        new_col = jnp.where(res >= 0, res.astype(jnp.int8), col)
+        new_dec = dec_par.at[:, j].set(new_col)
+        return new_t, new_g, new_valid, new_dec, overflow, inexact
+
+    f_t = jnp.full((F,), jnp.inf, dtype=dt).at[0].set(now.astype(dt))
+    f_gain = jnp.full((F,), -jnp.inf, dtype=dt).at[0].set(0.0)
+    f_valid = jnp.zeros((F,), dtype=bool).at[0].set(True)
+    f_dec = jnp.full((F, L), -1, dtype=jnp.int8)
+    f_t, f_gain, f_valid, f_dec, overflow, inexact = jax.lax.fori_loop(
+        0, L, body, (f_t, f_gain, f_valid, f_dec,
+                     jnp.asarray(False), jnp.asarray(False)))
+    best = jnp.argmax(jnp.where(f_valid, f_gain, neg))
     gain = jnp.where(f_valid[best], f_gain[best], 0.0)
     return f_dec[best], gain, overflow, inexact
 
@@ -521,7 +624,7 @@ def jax_unsupported_policies(policies) -> list:
 
 def spec_for_policy(policy, *, sizes, acc_server, deadline, latency,
                     server_time, dtype=jnp.float32, F: int = 0,
-                    pad_L: Optional[int] = None) -> PlannerSpec:
+                    pad_L: Optional[int] = None, actions=None) -> PlannerSpec:
     """Build the static spec for one policy instance (one fleet group).
 
     ``pad_L`` overrides the backlog pad width: heterogeneous fleets share
@@ -529,6 +632,11 @@ def spec_for_policy(policy, *, sizes, acc_server, deadline, latency,
     each group still trims to its own bound (``extend_fleet``'s per-stream
     ``mb``).  Raises for policies the JAX path does not support — the
     numpy path is always available for those.
+
+    ``actions`` is a split-computation ``ActionTable`` (or None): its split
+    rows become the spec's static ``split_*`` tuples — consumed by the cbo
+    planner only, exactly as on the numpy path (the baselines are
+    frame-only by design and ignore the table).
     """
     mb = getattr(policy, "max_backlog", None)
     if mb is None:
@@ -542,6 +650,18 @@ def spec_for_policy(policy, *, sizes, acc_server, deadline, latency,
                   deadline=float(deadline), latency=float(latency),
                   server_time=float(server_time), L=L, F=F, dtype=dtype)
     kind = planner_kind(policy)
+    if (actions is not None and getattr(actions, "has_splits", False)
+            and kind == "cbo"):
+        if actions.n_actions > 127:
+            raise ValueError(
+                f"backend='jax' stores decisions as int8: {actions.n_actions} "
+                "actions exceed 127 (subsample the cut catalog)")
+        k0 = actions.n_frame_actions
+        common.update(
+            split_sizes=tuple(float(x) for x in actions.sizes[k0:]),
+            split_acc=tuple(float(x) for x in actions.acc[k0:]),
+            split_t_dev=tuple(float(x) for x in actions.t_dev[k0:]),
+            split_srv_frac=tuple(float(x) for x in actions.srv_frac[k0:]))
     if kind == "cbo":
         return PlannerSpec(kind="cbo", **common)
     if kind == "threshold":

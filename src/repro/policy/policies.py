@@ -21,6 +21,15 @@ Under an edge fabric (``repro/net``) no policy needs topology code: the
 and each stream's EWMA tracks its own cell's uplink, so every policy
 below automatically plans against the stream's cell (``EnvBatch.cell_id``
 exposes the partition for policies that want more).
+
+Split-computation action tables (``Env.actions`` / ``EnvBatch.actions``,
+see ``repro.split``) are consumed by ``cbo`` only: the frontier DP plans
+over the full {frame@res r} ∪ {features@cut k} grid.  The simpler
+baselines deliberately keep the paper's frame-only resolution grid — a
+fixed-θ or rate rule has no way to trade device-prefix time against
+payload bytes, so handing them split actions would silently change their
+meaning.  They ignore ``actions``; frame actions occupy indices [0, m) of
+every table, so their plans stay valid action indices.
 """
 from __future__ import annotations
 

@@ -27,12 +27,78 @@ class Frame:
 
 
 @dataclass(frozen=True)
+class ActionTable:
+    """The planner's action grid: {frame@res r} ∪ {features@cut k}.
+
+    Frame actions occupy indices ``[0, m)`` with **action index ==
+    resolution index** — so every legacy consumer that treats a plan's
+    ``resolution`` as an index into ``cfg.resolutions`` keeps working, and
+    a table with no split actions is byte-for-byte the old ``(m,)`` payload
+    vector.  Split actions (``kind == 1``) follow: the device runs the
+    first k blocks (``t_dev`` seconds, from ``split/costs.py``), ships
+    int8 features (``sizes`` bytes), and the server runs the suffix
+    (``srv_frac`` × its current full-model time estimate).  ``res`` is the
+    resolution index the action's *prediction* is evaluated at (full
+    resolution for splits); ``cut`` is the catalog cut id (-1 for frames).
+
+    Invariants (checked): frame actions first with ``res == arange(m)``,
+    ``t_dev == 0`` and ``srv_frac == 1`` for frames — those identities are
+    what make a degenerate table reproduce the frame-only system
+    bit-for-bit (``x + 0.0`` and ``t * 1.0`` are float no-ops).
+    """
+
+    kind: np.ndarray  # (A,) int8 — 0 = frame upload, 1 = feature (split)
+    res: np.ndarray  # (A,) int — evaluation resolution index
+    cut: np.ndarray  # (A,) int — catalog cut id; -1 for frame actions
+    sizes: np.ndarray  # (A,) float64 — payload bytes on the wire
+    acc: np.ndarray  # (A,) float64 — server-side accuracy if offloaded
+    t_dev: np.ndarray  # (A,) float64 — device prefix seconds (0 for frames)
+    srv_frac: np.ndarray  # (A,) float64 — fraction of server_time (1 for frames)
+    names: tuple = ()  # optional per-split-action labels
+
+    def __post_init__(self):
+        m = self.n_frame_actions
+        assert m >= 1 and np.array_equal(self.kind[:m], np.zeros(m, dtype=np.int8))
+        assert np.array_equal(self.res[:m], np.arange(m))
+        assert not np.any(self.t_dev[:m]) and np.all(self.srv_frac[:m] == 1.0)
+        assert np.all(self.cut[:m] == -1)
+
+    @property
+    def n_actions(self) -> int:
+        return len(self.sizes)
+
+    @property
+    def n_frame_actions(self) -> int:
+        return int(np.sum(self.kind == 0))
+
+    @property
+    def has_splits(self) -> bool:
+        return self.n_actions > self.n_frame_actions
+
+    @classmethod
+    def frames_only(cls, *, sizes, acc) -> "ActionTable":
+        """The degenerate table: the legacy (m,) resolution grid."""
+        m = len(sizes)
+        return cls(kind=np.zeros(m, dtype=np.int8), res=np.arange(m),
+                   cut=np.full(m, -1, dtype=np.int64),
+                   sizes=np.asarray(sizes, dtype=np.float64),
+                   acc=np.asarray(acc, dtype=np.float64),
+                   t_dev=np.zeros(m), srv_frac=np.ones(m))
+
+    def rtt(self, server_time: float, latency: float) -> np.ndarray:
+        """(A,) per-action server+latency time: split suffixes scale the
+        current server-time estimate, frames pay it in full."""
+        return server_time * self.srv_frac + latency
+
+
+@dataclass(frozen=True)
 class Env:
     bandwidth: float  # uplink bytes/s
     latency: float  # one-way-ish network latency L (s)
     server_time: float  # T^o (s)
     deadline: float  # T (s), per-frame window
     acc_server: tuple[float, ...]  # A^o_r per resolution (ascending res)
+    actions: Optional[ActionTable] = None  # split-aware grid; None = frame-only
 
 
 @dataclass
@@ -80,6 +146,7 @@ class EnvBatch:
     cell_id: Optional[np.ndarray] = None  # (S,) int cell per stream; None = one cell
     occupancy: float = 1.0  # slow-tier batch-occupancy EWMA (1.0 = serial)
     queue_depth: float = 0.0  # mean pending replica work (s) at plan time
+    actions: Optional[ActionTable] = None  # split-aware grid; None = frame-only
 
     @property
     def n_streams(self) -> int:
@@ -92,14 +159,15 @@ class EnvBatch:
     def for_stream(self, s: int) -> Env:
         return Env(bandwidth=float(self.bandwidth[s]), latency=self.latency,
                    server_time=self.server_time, deadline=self.deadline,
-                   acc_server=self.acc_server)
+                   acc_server=self.acc_server, actions=self.actions)
 
     def subset(self, streams: np.ndarray) -> "EnvBatch":
         return EnvBatch(bandwidth=self.bandwidth[streams], latency=self.latency,
                         server_time=self.server_time, deadline=self.deadline,
                         acc_server=self.acc_server, sizes=self.sizes,
                         cell_id=None if self.cell_id is None else self.cell_id[streams],
-                        occupancy=self.occupancy, queue_depth=self.queue_depth)
+                        occupancy=self.occupancy, queue_depth=self.queue_depth,
+                        actions=self.actions)
 
 
 @dataclass
@@ -111,15 +179,31 @@ class PlanBatch:
     differ from the looped floats only by summation order)."""
 
     theta: np.ndarray  # (S,)
-    resolution: np.ndarray  # (S,) int — r° per stream (m-1 when no offloads)
+    resolution: np.ndarray  # (S,) int — a° per stream (m-1 when no offloads)
     n_offloads: np.ndarray  # (S,) int
     total_gain: np.ndarray  # (S,)
     base_acc: np.ndarray  # (S,)
     n_frames: np.ndarray  # (S,) int — backlog length at plan time
     off_stream: np.ndarray  # (E,) int
     off_pos: np.ndarray  # (E,) int — position within the stream's backlog
-    off_res: np.ndarray  # (E,) int — resolution index
+    off_res: np.ndarray  # (E,) int — ACTION index (== resolution index for frames)
     planned: np.ndarray = None  # (S,) bool — streams this batch planned for
+    off_kind: np.ndarray = None  # (E,) int8 — 0 frame, 1 features (from ActionTable)
+    off_cut: np.ndarray = None  # (E,) int — catalog cut id; -1 for frame actions
+
+    def __post_init__(self):
+        if self.off_kind is None:
+            self.off_kind = np.zeros(len(self.off_res), dtype=np.int8)
+        if self.off_cut is None:
+            self.off_cut = np.full(len(self.off_res), -1, dtype=np.int64)
+
+    def annotate_actions(self, actions: Optional[ActionTable]) -> "PlanBatch":
+        """Fill the (kind, cut) columns from the action table ``off_res``
+        indexes into.  A ``None``/degenerate table is all frames."""
+        if actions is not None and len(self.off_res):
+            self.off_kind = actions.kind[self.off_res]
+            self.off_cut = actions.cut[self.off_res]
+        return self
 
     def __len__(self) -> int:
         return len(self.theta)
@@ -151,6 +235,8 @@ class PlanBatch:
         if offs:
             a = np.asarray(offs, dtype=np.int64)
             out.off_stream, out.off_pos, out.off_res = a[:, 0], a[:, 1], a[:, 2]
+            out.off_kind = np.zeros(len(out.off_res), dtype=np.int8)
+            out.off_cut = np.full(len(out.off_res), -1, dtype=np.int64)
         return out
 
     @classmethod
@@ -174,6 +260,8 @@ class PlanBatch:
         out.off_stream = off_stream[order]
         out.off_pos = off_pos[order]
         out.off_res = off_res[order]
+        out.off_kind = np.zeros(len(out.off_res), dtype=np.int8)
+        out.off_cut = np.full(len(out.off_res), -1, dtype=np.int64)
         out.n_offloads = np.bincount(out.off_stream, minlength=n_streams)
         conf = np.asarray(off_conf, dtype=np.float64)[order]
         # theta/r° selection: per stream, highest conf, earliest pos on ties
@@ -193,12 +281,16 @@ class PlanBatch:
             self.off_stream = np.concatenate([self.off_stream, streams[sub.off_stream]])
             self.off_pos = np.concatenate([self.off_pos, sub.off_pos])
             self.off_res = np.concatenate([self.off_res, sub.off_res])
+            self.off_kind = np.concatenate([self.off_kind, sub.off_kind])
+            self.off_cut = np.concatenate([self.off_cut, sub.off_cut])
 
     def sort_offloads(self) -> None:
         order = np.lexsort((self.off_pos, self.off_stream))
         self.off_stream = self.off_stream[order]
         self.off_pos = self.off_pos[order]
         self.off_res = self.off_res[order]
+        self.off_kind = self.off_kind[order]
+        self.off_cut = self.off_cut[order]
 
     def plan(self, s: int) -> Plan:
         """Materialize stream ``s``'s per-stream ``Plan`` view."""

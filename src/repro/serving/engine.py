@@ -72,6 +72,13 @@ class ServeConfig:
     size_of: Callable = png_size_model  # resolution (scalar or array) -> upload bytes
     use_fused: bool = False  # fused Pallas calibrate+gate kernel in the fast pass
     platt_ab: Optional[tuple] = None  # (a, b) Platt coefficients for use_fused
+    # split-computation action table (policy.types.ActionTable, built via
+    # repro.split.build_action_table): enlarges the planner grid with
+    # features@cut actions.  None / a frames-only table keeps the paper's
+    # frame-only action space — and its pinned snapshots — bit-for-bit.
+    # Consumed by MultiStreamServer; CascadeServer (the single-stream paper
+    # loop) stays frame-only by design.
+    actions: Optional[object] = None
 
 
 def _fast_pass(cfg: ServeConfig, fast_forward, calibrate, images):
@@ -239,6 +246,7 @@ class MultiStreamServer:
             deadline=cfg.deadline, latency=fabric.latency,
             server_time=fabric.server_time, size_of=cfg.size_of,
             bw_init=self._stream_bw, cell_id=fabric.cell_of,
+            actions=cfg.actions,
         )
         self.metrics = AggregateMetrics.for_streams(n_streams, uplink=self.uplink,
                                                     fabric=fabric)
@@ -302,16 +310,28 @@ class MultiStreamServer:
             batch = self.fleet.plan_all(now, active)
             theta = batch.theta
             cap = np.where(active, np.maximum(batch.n_offloads, 1), 0)
-            res_idx = batch.resolution
+            res_idx = batch.resolution  # a° — ACTION index per stream
 
-            # vectorized gate + gathered cross-stream escalation batch
+            # the shared action→bytes table (satellite of the split plane):
+            # planner-assumed and engine-transmitted payloads come from ONE
+            # array, indexed by the planned action.  For a frames-only
+            # table these are exactly ``payload_sizes(size_of, resolutions)``
+            # and every extra term below is + 0.0 / * 1.0 — bit-for-bit the
+            # legacy pipeline.
+            act = self.fleet.action_table
+            act_res_px = resolutions[act.res]  # (A,) evaluation pixels
+
+            # vectorized gate + gathered cross-stream escalation batch; a
+            # split action's upload leaves the device only after the prefix
+            # runs (t_dev), which also shifts its fair-schedule readiness
             conf_gate = np.where(valid, conf, np.inf)
             s_idx, slot_idx = select_escalations(conf_gate, theta, cap)
-            res_px = resolutions[res_idx[s_idx]]
+            a_esc = res_idx[s_idx]
+            res_px = act_res_px[a_esc]
             esc = EscalationBatch(
                 stream=s_idx, slot=slot_idx,
-                t_ready=t_ready[s_idx, slot_idx],
-                payload=payload_sizes(cfg.size_of, res_px),
+                t_ready=t_ready[s_idx, slot_idx] + act.t_dev[a_esc],
+                payload=act.sizes[a_esc],
                 res=res_px,
             )
 
@@ -329,7 +349,10 @@ class MultiStreamServer:
                                          cost=esc.payload / self._stream_bw[esc.stream])
             q = esc.permuted(order)
             slow_q = slow_preds[order]
-            lands = self.fabric.transmit(q.stream, q.payload, q.t_ready)
+            # split suffixes cost a fraction of the full-model service time
+            # (frames scale by exactly 1.0 — a float no-op)
+            lands = self.fabric.transmit(q.stream, q.payload, q.t_ready,
+                                         service_scale=act.srv_frac[res_idx[q.stream]])
             ok = lands <= arr[q.stream, q.slot] + cfg.deadline
 
             final = fast_preds.copy()
@@ -379,6 +402,8 @@ class MultiStreamServer:
                     "off_stream": batch.off_stream.copy(),
                     "off_pos": batch.off_pos.copy(),
                     "off_res": batch.off_res.copy(),
+                    "off_kind": batch.off_kind.copy(),
+                    "off_cut": batch.off_cut.copy(),
                     "esc": esc_mask, "ok": ok_grid, "lat": lat.copy(),
                     "valid": valid.copy(), "correct": np.asarray(correct).copy(),
                     "bw_est": self.fleet.bw_est.copy(),
@@ -502,6 +527,7 @@ class MultiStreamServer:
         st._rebuild_offsets()
 
         if self.round_hook is not None:
+            act = self.fleet.action_table
             for i, (start, b) in enumerate(per_round):
                 dec = np.asarray(ys.dec[i])[:S]
                 off_s, off_p = np.nonzero(dec >= 0)
@@ -515,6 +541,10 @@ class MultiStreamServer:
                     "off_stream": off_s.astype(np.int64),
                     "off_pos": off_p.astype(np.int64),
                     "off_res": dec[off_s, off_p].astype(np.int64),
+                    # derived host-side from the shared table: the scan's
+                    # decision grid already carries the ACTION index
+                    "off_kind": act.kind[dec[off_s, off_p]].astype(np.int8),
+                    "off_cut": act.cut[dec[off_s, off_p]].astype(np.int64),
                     "esc": np.asarray(ys.esc[i])[:S, :b],
                     "ok": np.asarray(ys.ok[i])[:S, :b],
                     "lat": lat[i][:, :b],

@@ -110,6 +110,18 @@ class EngineSpec:
     cell_seed: tuple = ()  # (C,) per-cell jitter seeds
     cell_trace: tuple = ()  # (C,) bool — cell replays a BandwidthTrace
     cell_loop: tuple = ()  # (C,) bool — trace wraps at trace_dur
+    # split-computation action table (full A-length static vectors, frames
+    # first; () = frames-only, which keeps the legacy compiled graph — and
+    # the snapshot goldens pinned to it — untouched).  ``params.sizes`` is
+    # (A,) either way; frame actions occupy [0, m) so frame-only decision
+    # grids index it identically.
+    act_t_dev: tuple = ()  # (A,) device prefix seconds per action
+    act_srv_frac: tuple = ()  # (A,) fraction of replica service per action
+    act_res: tuple = ()  # (A,) evaluation resolution index per action
+
+    @property
+    def has_splits(self) -> bool:
+        return bool(self.act_t_dev)
 
     @property
     def m(self) -> int:
@@ -132,7 +144,7 @@ class EngineParams(NamedTuple):
     the pytree, so constant-rate runs keep the original structure.
     """
 
-    sizes: jnp.ndarray  # (m,) payload bytes per resolution
+    sizes: jnp.ndarray  # (A,) payload bytes per action (== (m,) frames-only)
     cell_bw: jnp.ndarray  # (C,) base bytes/s (trace cells: nominal base)
     cell_of: jnp.ndarray  # (S,) int32
     replica_st: jnp.ndarray  # (K,) per-replica service time
@@ -458,6 +470,11 @@ def _round_step(spec: EngineSpec, params: EngineParams,
 
     payload_s = params.sizes[res_idx].astype(dt)  # (S,) planned upload bytes
     t_ready = arr + spec.t_fast
+    if spec.has_splits:
+        # a split action's upload leaves the device only after the model
+        # prefix runs — shifts SFQ readiness AND the wire submit below
+        t_dev_s = jnp.asarray(spec.act_t_dev, dtype=dt)[res_idx]  # (S,)
+        t_ready = t_ready + t_dev_s[:, None]
 
     # (4) fair uplink schedule (FairScheduler.order).  Cost is constant per
     # stream within a round, so the SFQ tag recurrence unrolls over slots
@@ -480,6 +497,8 @@ def _round_step(spec: EngineSpec, params: EngineParams,
     s_o = stream_flat[o]
     m_o = esc_flat[o]
     sub_o = x.arr.reshape(-1)[o] + spec.t_fast  # real t_ready per row
+    if spec.has_splits:
+        sub_o = sub_o + t_dev_s[s_o]  # prefix runs before the upload
     pay_o = params.sizes[res_idx[s_o]].astype(dt)
     cell_o = params.cell_of[s_o]
     end_tx = jnp.zeros((N,), dtype=dt)
@@ -530,6 +549,12 @@ def _round_step(spec: EngineSpec, params: EngineParams,
     rep_busy, rep_n = carry.rep_busy, carry.rep_n
     rep_busy_s, rep_queued_s = carry.rep_busy_s, carry.rep_queued_s
     st_row = params.replica_st[replica_o].astype(dt)
+    if spec.has_splits:
+        # split suffixes cost srv_frac of the replica's service time
+        # (ReplicaPool.process's per-request service_scale); incompatible
+        # with continuous batching — jax_unsupported rejects that pairing
+        srv_o = jnp.asarray(spec.act_srv_frac, dtype=dt)[res_idx[s_o]]  # (N,)
+        st_row = st_row * srv_o
     service_o = st_row  # per-row reported processing time (= whole-batch
     # f(n) under continuous batching — ReplicaPool.last_service semantics)
     avg_batch = carry.avg_batch
@@ -604,8 +629,11 @@ def _round_step(spec: EngineSpec, params: EngineParams,
         done3 = jnp.zeros((N,), dtype=dt)
         for k in range(K):
             mk = m3 & (k3 == k)
+            st_k = (params.replica_st[k].astype(dt) * srv_o[o3]
+                    if spec.has_splits
+                    else jnp.full((N,), params.replica_st[k], dtype=dt))
             end_k, busy_k, wire_k, queued_k = _masked_lindley(
-                a3, jnp.full((N,), params.replica_st[k], dtype=dt), mk, rep_busy[k])
+                a3, st_k, mk, rep_busy[k])
             done3 = jnp.where(mk, end_k, done3)
             rep_busy = rep_busy.at[k].set(busy_k)
             rep_n = rep_n.at[k].add(mk.sum(dtype=jnp.int32))
@@ -628,8 +656,10 @@ def _round_step(spec: EngineSpec, params: EngineParams,
     ok_o = m_o & (lands_o <= arr_o + spec.deadline)
     lands_grid = jnp.zeros((N,), dtype=dt).at[o].set(lands_o).reshape(S, B)
     ok_grid = jnp.zeros((N,), bool).at[o].set(ok_o).reshape(S, B)
+    eval_res = (jnp.asarray(spec.act_res, jnp.int32)[res_idx]
+                if spec.has_splits else res_idx)  # action -> eval resolution
     slow_sel = jnp.take_along_axis(
-        x.slow_ok, res_idx[:, None, None].astype(jnp.int32), axis=2)[..., 0]
+        x.slow_ok, eval_res[:, None, None].astype(jnp.int32), axis=2)[..., 0]
     final_ok = jnp.where(ok_grid, slow_sel, x.fast_ok)
     correct_r = (final_ok & valid).sum(axis=1, dtype=jnp.int32)
 
@@ -744,6 +774,18 @@ def jax_unsupported(server) -> list:
                 f"cell {c}: jitter_mode='pcg' draws from a host rng the "
                 "compiled scan cannot reproduce — construct the Uplink "
                 "with jitter_mode='counter' for in-scan jitter")
+    if server.fleet.actions is not None:
+        at = server.fleet.action_table
+        if at.n_actions > 127:
+            reasons.append(
+                f"split action table with {at.n_actions} actions exceeds the "
+                "int8 decision grid (subsample the cut catalog to <= 127)")
+        pool = server.fabric.pool
+        if getattr(pool, "batching", None) is not None and pool._batching_live:
+            reasons.append(
+                "split actions with a live continuous-batching slow tier: "
+                "batches share one f(n) latency curve, so per-request "
+                "srv_frac scaling is not expressible (numpy raises too)")
     return reasons
 
 
@@ -787,7 +829,7 @@ def spec_from_server(server, collect: str = "metrics",
         batch_beta = pool.batch_beta
     common = dict(sizes=fleet.sizes, acc_server=fleet.acc_server,
                   deadline=fleet.deadline, latency=fleet.latency,
-                  server_time=fleet.server_time)
+                  server_time=fleet.server_time, actions=fleet.actions)
     if len(fleet.groups) == 1:
         # homogeneous: spec-level prune/oneshot, groups=() — the exact
         # single-planner compiled graph (snapshot goldens pin it)
@@ -811,6 +853,8 @@ def spec_from_server(server, collect: str = "metrics",
         prune, oneshot = True, False  # unused: per-group flags govern
     uplinks = [c.uplink for c in server.fabric.cells]
     varying = any(u.jitter > 0 or u.trace is not None for u in uplinks)
+    at = fleet.action_table
+    has_splits = fleet.actions is not None
     return EngineSpec(
         n_streams=S, batch=server.cfg.batch_size,
         n_cells=server.fabric.n_cells, n_replicas=server.fabric.n_replicas,
@@ -827,7 +871,10 @@ def spec_from_server(server, collect: str = "metrics",
         cell_seed=tuple(int(u.seed) for u in uplinks) if varying else (),
         cell_trace=tuple(u.trace is not None for u in uplinks) if varying else (),
         cell_loop=tuple(bool(u.trace.loop) if u.trace is not None else False
-                        for u in uplinks) if varying else ())
+                        for u in uplinks) if varying else (),
+        act_t_dev=tuple(float(x) for x in at.t_dev) if has_splits else (),
+        act_srv_frac=tuple(float(x) for x in at.srv_frac) if has_splits else (),
+        act_res=tuple(int(r) for r in at.res) if has_splits else ())
 
 
 def params_from_server(server, spec: EngineSpec) -> EngineParams:
@@ -868,7 +915,10 @@ def params_from_server(server, spec: EngineSpec) -> EngineParams:
                      trace_bps=jnp.asarray(np.stack(rates), dtype=dt),
                      trace_dur=jnp.asarray(durs, dtype=dt))
     return EngineParams(
-        sizes=jnp.asarray(server.fleet.sizes, dtype=dt),
+        # the shared action→bytes table, full width: (A,) with splits, the
+        # legacy (m,) resolution grid otherwise (identical values — the
+        # frames-only table IS payload_sizes(size_of, resolutions))
+        sizes=jnp.asarray(server.fleet.action_table.sizes, dtype=dt),
         cell_bw=jnp.asarray([u.bandwidth_bps for u in uplinks], dtype=dt),
         cell_of=jnp.asarray(cell_of, dtype=jnp.int32),
         replica_st=jnp.asarray(server.fabric.pool.server_time, dtype=dt),

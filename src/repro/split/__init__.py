@@ -1,0 +1,42 @@
+"""Split-computation offloading: ship intermediate features, not frames.
+
+The paper's action space is binary — return the NPU result, or upload the
+frame at resolution r.  DynO and the calibration-aided partitioning line of
+work (PAPERS.md) add a third family of actions: run the first k blocks
+on-device, quantize the intermediate activation to int8, ship *that*, and
+let the server finish the remaining blocks.  Under a constrained uplink the
+feature payload is often far smaller than any acceptable frame encoding,
+and the server only pays for the suffix of the network.
+
+  * ``points``  — the partition-point catalog: block boundaries per model
+    family (ViT / ResNet / Swin, from the existing configs) with activation
+    shapes, raw bytes, and int8 payload bytes under the
+    ``quant/quantize.py`` scale+int8 wire format.
+  * ``costs``   — device-prefix / server-suffix compute costs from
+    per-block FLOP accounting layered on ``launch/roofline.py`` (NPU peak
+    vs server peak), and the ``build_action_table`` glue that turns a
+    catalog into the planner's ``policy.types.ActionTable``.
+"""
+from repro.split.points import (
+    CutCatalog,
+    CutPoint,
+    activation_payload_nbytes,
+    catalog_for,
+)
+from repro.split.costs import (
+    DEFAULT_NPU_PEAK,
+    SplitCost,
+    build_action_table,
+    split_costs,
+)
+
+__all__ = [
+    "CutCatalog",
+    "CutPoint",
+    "SplitCost",
+    "DEFAULT_NPU_PEAK",
+    "activation_payload_nbytes",
+    "build_action_table",
+    "catalog_for",
+    "split_costs",
+]

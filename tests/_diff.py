@@ -29,7 +29,8 @@ LAT_ATOL = 1e-4
 
 # integer-exact record keys (the regression gate) vs tolerance floats
 EXACT_KEYS = ("res_idx", "cap", "n_off", "n_frames", "off_stream", "off_pos",
-              "off_res", "lengths", "correct", "esc", "ok", "valid")
+              "off_res", "off_kind", "off_cut", "lengths", "correct", "esc",
+              "ok", "valid")
 
 
 def assert_fleet_equal(numpy_state, jax_state, atol: float = 1e-6) -> None:
@@ -74,10 +75,40 @@ def assert_round_equal(numpy_rec: dict, jax_rec: dict, *, ctx="",
         assert not np.any(jax_rec["inexact"]), f"{ctx}: inexact eps-window prune"
 
 
+def canonical_actions():
+    """Split-enabled action table on the canonical differential config.
+
+    Two synthetic cuts over the (4, 8) frame grid, with every quantity
+    exactly representable in float32 (payloads are integer bytes, t_dev
+    and srv_frac are dyadic) so the two backends' feasibility compares
+    stay tie-free — the same design rule as ``frame_rate=32``.
+    """
+    from repro.core.netsim import payload_sizes, png_size_model
+    from repro.policy.types import ActionTable
+
+    frame_sizes = payload_sizes(png_size_model, np.asarray((4, 8)))
+    base = ActionTable.frames_only(sizes=frame_sizes,
+                                   acc=np.asarray((0.7, 0.99)))
+    t_dev = np.asarray([2.0 ** -10, 2.0 ** -8])  # ~1 ms / ~4 ms prefixes
+    srv_frac = np.asarray([0.5, 0.25])
+    sizes = np.asarray([np.floor(frame_sizes[1] * 0.75),
+                        np.floor(frame_sizes[0] * 1.25)])
+    acc = np.asarray([0.984375, 0.99])  # 63/64 and the top-frame accuracy
+    return ActionTable(
+        kind=np.r_[base.kind, np.ones(2, dtype=np.int8)],
+        res=np.r_[base.res, np.full(2, 1, dtype=np.int64)],
+        cut=np.r_[base.cut, np.arange(2, dtype=np.int64)],
+        sizes=np.r_[base.sizes, sizes],
+        acc=np.r_[base.acc, acc],
+        t_dev=np.r_[base.t_dev, t_dev],
+        srv_frac=np.r_[base.srv_frac, srv_frac],
+        names=base.names + ("feat@cut0", "feat@cut1"))
+
+
 def make_server(backend: str, *, S: int, policy="cbo", scheduler="round_robin",
                 topology="degenerate", placement="jsq", frame_rate=32.0,
                 bw_mbps=50.0, seed=0, jitter=0.0, jitter_mode="counter",
-                traces=None):
+                traces=None, actions=None):
     """One ``MultiStreamServer`` on the canonical differential config.
 
     ``frame_rate=32`` keeps the arrival grid exactly representable in
@@ -95,7 +126,7 @@ def make_server(backend: str, *, S: int, policy="cbo", scheduler="round_robin",
 
     fast, slow, cal = synthetic_tiers()
     cfg = ServeConfig(resolutions=(4, 8), acc_server=(0.7, 0.99), batch_size=16,
-                      frame_rate=frame_rate, deadline=0.2)
+                      frame_rate=frame_rate, deadline=0.2, actions=actions)
 
     def trace_of(c):
         return traces[c % len(traces)] if traces else None
@@ -121,7 +152,8 @@ def make_server(backend: str, *, S: int, policy="cbo", scheduler="round_robin",
 def run_differential(*, S: int, policy="cbo", scheduler="round_robin",
                      topology="degenerate", placement="jsq", churn=False,
                      n_frames=64, seed=0, frame_rate=32.0, bw_mbps=50.0,
-                     jitter=0.0, jitter_mode="counter", traces=None):
+                     jitter=0.0, jitter_mode="counter", traces=None,
+                     actions=None):
     """Replay one seeded workload through both backends and assert every
     round record matches.  Returns (numpy_metrics, jax_metrics)."""
     from repro.serving.events import ArrivalSchedule
@@ -142,7 +174,7 @@ def run_differential(*, S: int, policy="cbo", scheduler="round_robin",
                                topology=topology, placement=placement,
                                frame_rate=frame_rate, bw_mbps=bw_mbps, seed=seed,
                                jitter=jitter, jitter_mode=jitter_mode,
-                               traces=traces)
+                               traces=traces, actions=actions)
         recs = []
         srv.round_hook = recs.append
         metrics[backend] = srv.process_streams(imgs, labels, schedule=sched)

@@ -62,3 +62,68 @@ def test_fp16_tree_is_roundtrip_cast():
     out = fp16_tree(tree)
     assert out["w"].dtype == jnp.float32
     assert float(jnp.abs(out["w"] - tree["w"]).max()) > 0  # precision was lost
+
+
+# --------------------------------------------------------------------------- #
+# Activation tensors (the split-offloading wire format, split/points.py):
+# the device quantizes the boundary activation with quantize_tensor(axis=-1)
+# and ships values + per-row scales; the catalog's analytic payload formula
+# must match the materialized QTensor byte-for-byte.
+# --------------------------------------------------------------------------- #
+
+# token-grid (ViT/Swin) and spatial (ResNet) activation shapes
+ACT_SHAPES = ((197, 384), (50, 768), (7, 7, 2048), (16, 16, 512), (64,))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(0, len(ACT_SHAPES) - 1))
+def test_activation_roundtrip_error_bound(seed, shape_idx):
+    """Activation round-trip obeys the same |err| <= scale/2 bound as
+    weights — heavy-tailed GELU-like activations included."""
+    shape = ACT_SHAPES[shape_idx]
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, shape, jnp.float32)
+    x = x * jax.nn.sigmoid(1.702 * x)  # GELU-ish: skewed, heavy right tail
+    q = quantize_tensor(x, axis=-1)
+    err = jnp.abs(q.dequantize(jnp.float32) - x)
+    assert bool(jnp.all(err <= q.scale / 2 + 1e-6))
+
+
+@pytest.mark.parametrize("shape", ACT_SHAPES)
+def test_activation_scale_is_per_leading_row(shape):
+    """axis=-1 symmetric quantization keeps one f32 scale per leading row:
+    scale.shape == shape[:-1] + (1,) — the shape the split catalog's
+    payload formula assumes."""
+    x = jax.random.normal(jax.random.PRNGKey(1), shape, jnp.float32)
+    q = quantize_tensor(x, axis=-1)
+    assert q.values.dtype == jnp.int8 and q.values.shape == shape
+    assert q.scale.dtype == jnp.float32
+    assert q.scale.shape == tuple(shape[:-1]) + (1,)
+
+
+@pytest.mark.parametrize("shape", ACT_SHAPES)
+def test_activation_payload_nbytes_matches_qtensor(shape):
+    """The catalog's analytic wire size equals the materialized QTensor's
+    actual bytes (values.nbytes + scale.nbytes), exactly."""
+    from repro.split.points import activation_payload_nbytes, qtensor_nbytes
+
+    x = jax.random.normal(jax.random.PRNGKey(2), shape, jnp.float32)
+    q = quantize_tensor(x, axis=-1)
+    assert qtensor_nbytes(q) == activation_payload_nbytes(shape)
+
+
+def test_activation_payload_nbytes_seeded_fuzz():
+    """Seeded fuzz over random activation shapes/ranks (runs even without
+    hypothesis): analytic == materialized for every draw."""
+    from repro.split.points import activation_payload_nbytes, qtensor_nbytes
+
+    rng = np.random.default_rng(7)
+    for _ in range(20):
+        rank = int(rng.integers(1, 4))
+        shape = tuple(int(s) for s in rng.integers(1, 48, size=rank))
+        x = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+        q = quantize_tensor(x, axis=-1)
+        assert qtensor_nbytes(q) == activation_payload_nbytes(shape), shape
+        # int8 elements + one f32 scale per leading row, explicitly:
+        rows = int(np.prod(shape[:-1])) if rank > 1 else 1
+        assert qtensor_nbytes(q) == int(np.prod(shape)) + 4 * rows

@@ -1,0 +1,342 @@
+"""Split-computation offloading (``src/repro/split`` + the action plane).
+
+Five layers:
+
+* **catalog** — per-family cut points carry the exact int8+scales wire
+  size (pinned against a materialized ``quantize_tensor`` QTensor), FLOP
+  prefixes are monotone, and ``subsample`` thins evenly;
+* **costs** — roofline device-prefix seconds and server-suffix fractions,
+  and the ``build_action_table`` packing invariants;
+* **planner** — a degenerate (frames-only) ``ActionTable`` reproduces the
+  table-free planner bit-for-bit on both ``cbo_plan`` and
+  ``cbo_plan_many``; with splits, the batched planner stays bit-equal to
+  the looped one, and a feature cut rescues frames no resolution can land;
+* **engine** — the planner, the numpy engine, and the wire all read ONE
+  action→bytes table: every transmitted (payload, service_scale) pair is
+  a row of the table at the planned action;
+* **differential** — the full numpy↔jax round loop stays
+  decision-for-decision equal with a split-enabled table (the
+  ``tests/_diff.py`` exactness policy), including churn + 2-cell fabric.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from _diff import canonical_actions, make_server, run_differential
+
+from repro.policy.frontier import cbo_plan, cbo_plan_many
+from repro.policy.types import ActionTable, Env, EnvBatch, Frame
+from repro.split import (
+    DEFAULT_NPU_PEAK,
+    activation_payload_nbytes,
+    build_action_table,
+    catalog_for,
+    split_costs,
+)
+
+
+# --------------------------------------------------------------------- #
+# catalog
+# --------------------------------------------------------------------- #
+
+
+def test_vit_catalog_shapes_and_payloads():
+    cat = catalog_for("vit-s16")
+    assert cat.family == "vit" and cat.img_res == 224
+    assert len(cat) == 11  # 12 layers, no cut after the last
+    for p in cat:
+        assert p.act_shape == (197, 384)  # 14*14 patches + cls, d_model
+        assert p.payload_nbytes == 197 * 384 + 197 * 4 == 76436
+        assert p.raw_nbytes == 197 * 384 * 4
+        assert 3.5 < p.compression < 4.0  # int8 + per-row scales vs f32
+
+
+def test_resnet_catalog_spatial_shrink():
+    cat = catalog_for("resnet-50")
+    assert cat.family == "resnet" and len(cat) == 3 + 4 + 6 + 3 - 1
+    first, last = cat.points[0], cat.points[-1]
+    assert first.act_shape == (56, 56, 256)
+    assert last.act_shape == (7, 7, 2048)
+    assert last.payload_nbytes == 7 * 7 * 2048 + 7 * 7 * 4 == 100548
+    # stages shrink spatially faster than channels grow: payloads descend
+    assert last.payload_nbytes < first.payload_nbytes
+
+
+def test_swin_catalog_stage4_is_cheap_to_finish():
+    cat = catalog_for("swin-b")
+    assert cat.family == "swin" and len(cat) == 2 + 2 + 18 + 2 - 1
+    s4 = [p for p in cat if "/s4" in p.name]
+    assert s4 and s4[0].act_shape == (49, 1024)
+    assert s4[0].payload_nbytes == 49 * 1024 + 49 * 4 == 50372
+    # cutting entering stage 4 leaves only a sliver of server work
+    assert s4[0].suffix_fraction < 0.15
+
+
+@pytest.mark.parametrize("arch", ("vit-s16", "resnet-50", "swin-b"))
+def test_catalog_flop_accounting(arch):
+    cat = catalog_for(arch)
+    prefixes = np.array([p.prefix_flops for p in cat])
+    assert (np.diff(prefixes) > 0).all()  # strictly deeper cuts cost more
+    for p in cat:
+        assert p.total_flops == cat.total_flops
+        assert 0.0 < p.suffix_fraction < 1.0
+        assert p.payload_nbytes == activation_payload_nbytes(p.act_shape)
+
+
+def test_catalog_rejects_unsupported_family():
+    with pytest.raises(ValueError, match="no split catalog"):
+        catalog_for("dit-b2")
+
+
+def test_subsample_thins_and_reindexes():
+    cat = catalog_for("swin-b")
+    sub = cat.subsample(4)
+    assert len(sub) == 4
+    assert [p.cut_id for p in sub] == [0, 1, 2, 3]  # re-indexed densely
+    # evenly spread, endpoints kept
+    assert sub.points[0].name == cat.points[0].name
+    assert sub.points[-1].name == cat.points[-1].name
+    assert cat.subsample(0) is cat and cat.subsample(99) is cat
+
+
+# --------------------------------------------------------------------- #
+# costs + table packing
+# --------------------------------------------------------------------- #
+
+
+def test_split_costs_are_roofline_compute_bounds():
+    cat = catalog_for("vit-s16", max_cuts=4)
+    costs = split_costs(cat, device_peak=DEFAULT_NPU_PEAK)
+    for p, c in zip(cat, costs):
+        assert c.t_dev == p.prefix_flops / DEFAULT_NPU_PEAK  # 0-byte roofline
+        assert c.srv_frac == p.suffix_fraction
+    t_dev = np.array([c.t_dev for c in costs])
+    frac = np.array([c.srv_frac for c in costs])
+    assert (np.diff(t_dev) > 0).all() and (np.diff(frac) < 0).all()
+
+
+def test_build_action_table_packing():
+    cat = catalog_for("swin-b", max_cuts=3)
+    size_of = lambda r: 100.0 * r * r
+    acc = (0.7, 0.99)
+    table = build_action_table(cat, resolutions=(4, 8), size_of=size_of,
+                               acc_server=acc, acc_drop=0.01)
+    m = 2
+    assert table.n_frame_actions == m and table.n_actions == m + 3
+    assert table.has_splits
+    np.testing.assert_array_equal(table.kind, [0, 0, 1, 1, 1])
+    np.testing.assert_array_equal(table.res[m:], [m - 1] * 3)  # full res
+    np.testing.assert_array_equal(table.cut[m:], [0, 1, 2])
+    np.testing.assert_array_equal(table.sizes[m:], cat.payload_bytes())
+    np.testing.assert_array_equal(table.acc[m:], [0.99 - 0.01] * 3)
+    costs = split_costs(cat)
+    np.testing.assert_array_equal(table.t_dev[m:], [c.t_dev for c in costs])
+    np.testing.assert_array_equal(table.srv_frac[m:], [c.srv_frac for c in costs])
+    assert table.names == tuple(p.name for p in cat)  # per-split labels
+    # per-action rtt: frames pay full server time, splits a fraction
+    rtt = table.rtt(0.1, 0.01)
+    np.testing.assert_array_equal(rtt[:m], 0.11)
+    assert (rtt[m:] < 0.11).all()
+
+
+def test_build_action_table_none_catalog_is_frames_only():
+    size_of = lambda r: 100.0 * r * r
+    t = build_action_table(None, resolutions=(4, 8), size_of=size_of,
+                           acc_server=(0.7, 0.99))
+    ref = ActionTable.frames_only(sizes=[1600.0, 6400.0], acc=[0.7, 0.99])
+    assert not t.has_splits
+    np.testing.assert_array_equal(t.sizes, ref.sizes)
+    np.testing.assert_array_equal(t.acc, ref.acc)
+
+
+# --------------------------------------------------------------------- #
+# planner: degenerate table == no table, looped == batched, splits win
+# --------------------------------------------------------------------- #
+
+_SIZES = (2500.0, 60000.0)
+_ACC = (0.7, 0.99)
+
+
+def _rand_frames(rng, k, sizes=_SIZES):
+    return [Frame(arrival=float(i) / 32.0, conf=float(rng.integers(20, 99)) / 100.0,
+                  sizes=sizes) for i in range(k)]
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_degenerate_table_is_bitwise_noop_cbo_plan(seed):
+    rng = np.random.default_rng(seed)
+    frames = _rand_frames(rng, int(rng.integers(1, 24)))
+    table = ActionTable.frames_only(sizes=np.asarray(_SIZES), acc=np.asarray(_ACC))
+    kw = dict(bandwidth=float(rng.uniform(2e4, 5e5)), latency=0.05,
+              server_time=0.037, deadline=0.2, acc_server=_ACC)
+    a = cbo_plan(frames, Env(**kw))
+    b = cbo_plan(frames, Env(**kw, actions=table))
+    assert a.offloads == b.offloads
+    assert a.theta == b.theta and a.resolution == b.resolution
+    assert a.total_gain == b.total_gain  # bitwise: same float ops ran
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_degenerate_table_is_bitwise_noop_cbo_plan_many(seed):
+    from repro.policy.fleet import FleetState
+
+    rng = np.random.default_rng(100 + seed)
+    S = int(rng.integers(2, 6))
+    state = FleetState(S, max_backlog=64)
+    for s in range(S):
+        k = int(rng.integers(0, 16))
+        if k:
+            state.extend(np.full(k, s, dtype=np.int64), np.arange(k) / 32.0,
+                         rng.integers(20, 99, size=k) / 100.0)
+    table = ActionTable.frames_only(sizes=np.asarray(_SIZES), acc=np.asarray(_ACC))
+    kw = dict(bandwidth=rng.uniform(2e4, 5e5, size=S), latency=0.05,
+              server_time=0.037, deadline=0.2, acc_server=_ACC,
+              sizes=np.asarray(_SIZES))
+    now = np.zeros(S)
+    a = cbo_plan_many(state, EnvBatch(**kw), now)
+    b = cbo_plan_many(state, EnvBatch(**kw, actions=table), now)
+    for name in ("theta", "resolution", "n_offloads", "off_stream", "off_pos",
+                 "off_res", "total_gain"):
+        np.testing.assert_array_equal(getattr(a, name), getattr(b, name), err_msg=name)
+    assert not b.off_kind.any() and (b.off_cut == -1).all()
+
+
+def _split_table():
+    """Frames (2) + two cuts; the deep cut is tiny on the wire and leaves
+    the server only a 10% suffix."""
+    base = ActionTable.frames_only(sizes=np.asarray(_SIZES), acc=np.asarray(_ACC))
+    return ActionTable(
+        kind=np.r_[base.kind, np.ones(2, dtype=np.int8)],
+        res=np.r_[base.res, np.full(2, 1, dtype=np.int64)],
+        cut=np.r_[base.cut, np.arange(2, dtype=np.int64)],
+        sizes=np.r_[base.sizes, [30000.0, 8000.0]],
+        acc=np.r_[base.acc, [0.98, 0.95]],
+        t_dev=np.r_[base.t_dev, [0.002, 0.004]],
+        srv_frac=np.r_[base.srv_frac, [0.5, 0.1]])
+
+
+def test_split_action_rescues_deadline_no_frame_can_meet():
+    # 0.1 MB/s uplink: the 60 kB frame needs 0.6 s, the 2.5 kB thumb gains
+    # nothing over conf=0.9 — only the 8 kB deep-cut payload (tx 0.08 s,
+    # rtt 0.02 s, t_dev 4 ms) lands inside the 0.2 s window.
+    env = Env(bandwidth=1e5, latency=0.01, server_time=0.1, deadline=0.2,
+              acc_server=_ACC, actions=_split_table())
+    frames = [Frame(arrival=0.0, conf=0.9, sizes=_SIZES)]
+    plan = cbo_plan(frames, env)
+    assert plan.offloads == [(0, 3)]  # the features@cut1 action (index 3)
+    assert env.actions.kind[plan.resolution] == 1
+    # frame-only on the same instance: nothing lands
+    frame_env = Env(bandwidth=1e5, latency=0.01, server_time=0.1, deadline=0.2,
+                    acc_server=_ACC)
+    assert cbo_plan(frames, frame_env).offloads == []
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_batched_planner_matches_looped_with_splits(seed):
+    from repro.policy.fleet import FleetState
+
+    rng = np.random.default_rng(200 + seed)
+    S = int(rng.integers(2, 6))
+    state = FleetState(S, max_backlog=64)
+    for s in range(S):
+        k = int(rng.integers(0, 16))
+        if k:
+            state.extend(np.full(k, s, dtype=np.int64), np.arange(k) / 32.0,
+                         rng.integers(20, 99, size=k) / 100.0)
+    table = _split_table()
+    env = EnvBatch(bandwidth=rng.uniform(3e4, 3e5, size=S), latency=0.05,
+                   server_time=0.037, deadline=0.2, acc_server=_ACC,
+                   sizes=np.asarray(_SIZES), actions=table)
+    now = np.zeros(S)
+    batch = cbo_plan_many(state, env, now)
+    offs = state.offsets
+    for s in range(S):
+        frames = [Frame(arrival=float(a), conf=float(c), sizes=_SIZES)
+                  for a, c in zip(state.arrival[offs[s]:offs[s + 1]],
+                                  state.conf[offs[s]:offs[s + 1]])]
+        p = cbo_plan(frames, env.for_stream(s))
+        assert batch.plan(s).offloads == p.offloads, f"stream {s}"
+        assert batch.theta[s] == p.theta and batch.resolution[s] == p.resolution
+        np.testing.assert_allclose(batch.total_gain[s], p.total_gain, rtol=1e-12)
+    # the annotation columns agree with the table at the chosen actions
+    np.testing.assert_array_equal(batch.off_kind, table.kind[batch.off_res])
+    np.testing.assert_array_equal(batch.off_cut, table.cut[batch.off_res])
+
+
+# --------------------------------------------------------------------- #
+# engine: one shared action→bytes table end to end
+# --------------------------------------------------------------------- #
+
+
+def test_engine_transmits_table_bytes_and_service_scale():
+    """Regression for the shared table: every (payload, service_scale) pair
+    the numpy engine puts on the wire is a row of the planner's
+    ``ActionTable`` — planner-assumed bytes == transmitted bytes."""
+    from repro.serving.synthetic import synthetic_streams
+
+    act = canonical_actions()
+    srv, _cfg = make_server("numpy", S=3, actions=act, bw_mbps=2.0)
+    calls = []
+    orig = srv.fabric.transmit
+
+    def spy(stream, payload, t_submit, *, service_scale=None):
+        calls.append((np.atleast_1d(np.asarray(payload, dtype=np.float64)).copy(),
+                      np.atleast_1d(np.asarray(service_scale, dtype=np.float64)).copy()))
+        return orig(stream, payload, t_submit, service_scale=service_scale)
+
+    srv.fabric.transmit = spy
+    imgs, labels = synthetic_streams(3, 48, seed=0)
+    m = srv.process_streams(imgs, labels)
+    assert m.n_offloaded > 0 and calls
+    rows = {(float(s), float(f)) for s, f in zip(act.sizes, act.srv_frac)}
+    seen_split = False
+    for payload, scale in calls:
+        for p, f in zip(payload, np.broadcast_to(scale, payload.shape)):
+            assert (float(p), float(f)) in rows, (p, f)
+            seen_split |= f != 1.0
+    assert seen_split  # at least one feature-cut action actually shipped
+
+
+def test_service_scale_rejected_under_live_batching():
+    from repro.net.replicas import ReplicaPool
+    from repro.slowtier import ContinuousBatching, LinearBatch
+
+    pool = ReplicaPool(1, 0.05, serial=True,
+                       batching=ContinuousBatching(LinearBatch(0.01, 0.002),
+                                                   window_s=0.01))
+    with pytest.raises(ValueError, match="continuous batching"):
+        pool.process(np.array([0.0]), np.array([0]),
+                     service_scale=np.array([0.5]))
+    # scale 1.0 is the float no-op — allowed even with live batching
+    pool.process(np.array([0.0]), np.array([0]), service_scale=np.array([1.0]))
+
+
+def test_jax_unsupported_flags_splits_with_live_batching():
+    from repro.serving.engine_jax import jax_unsupported
+    from repro.slowtier import ContinuousBatching, LinearBatch
+
+    srv, _ = make_server("numpy", S=2, actions=canonical_actions(), bw_mbps=2.0)
+    assert not jax_unsupported(srv)  # split tables alone are supported
+    srv.fabric.pool.batching = ContinuousBatching(LinearBatch(0.01, 0.002),
+                                                  window_s=0.01)
+    reasons = jax_unsupported(srv)
+    assert reasons and any("batching" in r for r in reasons)
+
+
+# --------------------------------------------------------------------- #
+# numpy <-> jax differential with a split-enabled table
+# --------------------------------------------------------------------- #
+
+
+def test_split_differential_degenerate_topology():
+    mn, _mj = run_differential(S=3, n_frames=48, bw_mbps=2.0,
+                               actions=canonical_actions())
+    assert mn.n_offloaded > 0  # splits actually exercised, not planned away
+
+
+def test_split_differential_churn_two_cells():
+    mn, _mj = run_differential(S=4, n_frames=48, bw_mbps=2.0, churn=True,
+                               topology="cells", placement="jsq",
+                               actions=canonical_actions())
+    assert mn.n_frames > 0
