@@ -182,20 +182,26 @@ def check_jax_parity(S: int = 4, n_frames: int = 64, seed: int = 0,
 
 
 def bench_jax_one(S: int, n_rounds: int, seed: int, backlog: int = 8,
-                  batch: int = 8, devices: int = 1) -> dict:
+                  batch: int = 8, devices: int = 1, collect: str = "none",
+                  telemetry: bool = False, repeats: int = 1) -> dict:
     """Round-loop throughput of the jitted engine on synthetic inputs.
 
-    ``collect="none"`` so the scan carries nothing per round beyond the
-    fleet state — the S=1e6 regime the numpy loop cannot reach.  With
-    ``devices > 1`` the (S,) stream arrays are placed sharded over an
+    ``collect="none"`` (the default) so the scan carries nothing per round
+    beyond the fleet state — the S=1e6 regime the numpy loop cannot reach;
+    ``collect="metrics"`` / ``telemetry=True`` measure the cost of the
+    per-round outputs (the ``--telemetry`` overhead gate compares them).
+    With ``devices > 1`` the (S,) stream arrays are placed sharded over an
     (N, 1) mesh (S rounds up to a device multiple) and the jitted scan
-    runs SPMD.  The engine is AOT-compiled so the reported ``compile_s``
-    is the real lower+compile wall-clock, not a first-call subtraction."""
+    runs SPMD.  The engine is AOT-compiled (``repro.obs.profile
+    .aot_split``) so the reported ``compile_s`` is the real lower+compile
+    wall-clock, not a first-call subtraction; ``repeats`` takes the best
+    of N steady-state executions (fresh carry each — the scan donates)."""
     import jax
     import jax.numpy as jnp
 
     from repro.core.netsim import mbps, payload_sizes, png_size_model
     from repro.launch.mesh import make_streams_mesh
+    from repro.obs.profile import aot_split
     from repro.policy.fleet_jax import spec_for_policy
     from repro.policy.registry import make_policy
     from repro.serving import engine_jax as ej
@@ -210,7 +216,7 @@ def bench_jax_one(S: int, n_rounds: int, seed: int, backlog: int = 8,
                             sizes=sizes, acc_server=(0.7, 0.99), deadline=0.2,
                             latency=0.05, server_time=0.037)
     spec = ej.EngineSpec(n_streams=S, batch=batch, n_cells=1, n_replicas=1,
-                         planner=pspec, collect="none")
+                         planner=pspec, collect=collect, telemetry=telemetry)
     bw = mbps(6.0)
     rng = np.random.default_rng(seed)
     fr = 32.0
@@ -244,9 +250,7 @@ def bench_jax_one(S: int, n_rounds: int, seed: int, backlog: int = 8,
         step = ej.make_engine(spec)
         carry0 = ej.init_carry(spec, params)
         jax.block_until_ready((params, carry0, inputs))
-        t0 = time.perf_counter()
-        compiled = step.lower(params, carry0, inputs).compile()
-        t_compile = time.perf_counter() - t0
+        compiled, t_compile = aot_split(step, params, carry0, inputs)
         # the engine donates its carry buffers (make_engine, donate_argnums):
         # each call needs a freshly built carry, rebuilt outside the timed
         # region; one warm-up execution absorbs first-dispatch costs, but
@@ -257,16 +261,191 @@ def bench_jax_one(S: int, n_rounds: int, seed: int, backlog: int = 8,
             jax.block_until_ready(carry)
             carry0 = ej.init_carry(spec, params)
             jax.block_until_ready(carry0)
-        t0 = time.perf_counter()
-        carry, _ = compiled(params, carry0, inputs)
-        jax.block_until_ready(carry)
-        t_steady = time.perf_counter() - t0
+        times, ys = [], None
+        for r in range(max(int(repeats), 1)):
+            t0 = time.perf_counter()
+            carry, ys = compiled(params, carry0, inputs)
+            jax.block_until_ready(carry)
+            times.append(time.perf_counter() - t0)
+            if r + 1 < repeats:
+                carry0 = ej.init_carry(spec, params)
+                jax.block_until_ready(carry0)
+        t_steady = min(times)
+    # rounds actually emitted through the ys pytree — the telemetry gate
+    # asserts this equals the requested round count
+    rounds_emitted = None
+    if ys is not None:
+        col = ys.ts_bw_est if telemetry else ys.off_counts
+        rounds_emitted = int(col.shape[0])
     return {"backend": "jax", "n_streams": S, "devices": devices,
             "rounds": n_rounds, "batch": batch, "backlog": backlog,
+            "collect": collect, "telemetry": bool(telemetry),
+            "rounds_emitted": rounds_emitted,
             "compile_s": round(t_compile, 3),
             "steady_s": round(t_steady, 4),
             "rounds_per_s": round(n_rounds / max(t_steady, 1e-12), 2),
             "frames_per_s": round(n_rounds * S * batch / max(t_steady, 1e-12), 1)}
+
+
+def _telemetry_server(backend, S, cfg, fab, telemetry):
+    from repro.serving import MultiStreamServer
+    from repro.serving.synthetic import synthetic_tiers
+
+    fast, slow, cal = synthetic_tiers()
+    return MultiStreamServer(cfg, fast, slow, cal, None, n_streams=S,
+                             fabric=fab, backend=backend, telemetry=telemetry)
+
+
+def check_telemetry_parity(S: int = 8, n_frames: int = 64, seed: int = 0) -> dict:
+    """Recorder gate: both backends replay one seeded workload with the
+    recorder on; the recorded series must agree round-for-round under the
+    exactness policy (integer series bit-equal, floats at tolerance)."""
+    from repro.core.netsim import Uplink, mbps
+    from repro.net import EdgeFabric
+    from repro.obs import Telemetry
+    from repro.serving import ServeConfig
+    from repro.serving.synthetic import synthetic_streams
+
+    cfg = ServeConfig(resolutions=(4, 8), acc_server=(0.7, 0.99), batch_size=16,
+                      frame_rate=32.0, deadline=0.2)
+    imgs, labels = synthetic_streams(S, n_frames, seed=seed)
+
+    def run(backend):
+        tel = Telemetry(record=True)
+        fab = EdgeFabric.degenerate(
+            Uplink(bandwidth_bps=mbps(50.0), latency=0.05,
+                   server_time=cfg.server_time), n_streams=S)
+        _telemetry_server(backend, S, cfg, fab, tel).process_streams(imgs, labels)
+        return tel.recorder
+
+    rec_np, rec_jx = run("numpy"), run("jax")
+    expected = n_frames // cfg.batch_size
+    assert rec_np.n_rounds == rec_jx.n_rounds == expected, (
+        rec_np.n_rounds, rec_jx.n_rounds, expected)
+    rec_np.assert_close(rec_jx, ctx="telemetry parity")
+    return {"telemetry_parity": "exact", "n_streams": S,
+            "rounds": rec_np.n_rounds, "series": len(rec_np.as_dict())}
+
+
+def bench_telemetry_overhead(S: int, n_rounds: int, seed: int) -> dict:
+    """Recorder-on vs recorder-off steady-state cost of the compiled round
+    loop at identical collect level.  The gate allows 5% relative plus a
+    50 ms absolute slack (CI scheduler noise on sub-second runs); best of
+    two executions each side."""
+    base = bench_jax_one(S, n_rounds, seed, collect="metrics", repeats=2)
+    tele = bench_jax_one(S, n_rounds, seed, collect="metrics",
+                         telemetry=True, repeats=2)
+    assert tele["rounds_emitted"] == n_rounds, tele["rounds_emitted"]
+    limit = base["steady_s"] * 1.05 + 0.05
+    assert tele["steady_s"] <= limit, (
+        f"telemetry overhead: {tele['steady_s']}s vs off "
+        f"{base['steady_s']}s (limit {limit:.4f}s)")
+    over = tele["steady_s"] / max(base["steady_s"], 1e-12) - 1.0
+    return {"n_streams": S, "rounds": n_rounds,
+            "steady_off_s": base["steady_s"], "steady_on_s": tele["steady_s"],
+            "overhead_pct": round(over * 100.0, 2), "gate": "<=5% + 50ms"}
+
+
+def telemetry_fairness_demo(S: int = 64, n_frames: int = 128,
+                            seed: int = 0) -> dict:
+    """The N=64 fairness collapse as a recorded trajectory: one shared
+    starved cell (0.12 Mbps for 64 streams), Jain's index over cumulative
+    landed offloads per round.  The end-of-run scalar only says fairness
+    degraded; the series shows WHEN the collapse sets in (round 1, Jain
+    ~0.46 on the canonical seed) and the partial recovery as the bandwidth
+    EWMAs learn the contended share and the policies back off."""
+    from repro.core.netsim import Uplink, mbps
+    from repro.net import EdgeFabric
+    from repro.obs import Telemetry
+    from repro.serving import ServeConfig
+    from repro.serving.synthetic import synthetic_streams
+
+    cfg = ServeConfig(resolutions=(4, 8), acc_server=(0.7, 0.99), batch_size=16,
+                      frame_rate=32.0, deadline=0.2)
+    imgs, labels = synthetic_streams(S, n_frames, seed=seed)
+    tel = Telemetry(record=True)
+    fab = EdgeFabric.degenerate(
+        Uplink(bandwidth_bps=mbps(0.12), latency=0.05,
+               server_time=cfg.server_time), n_streams=S)
+    _telemetry_server("numpy", S, cfg, fab, tel).process_streams(imgs, labels)
+    jain = tel.recorder.jain_series()
+    onset = next((int(i) for i, j in enumerate(jain) if j < 0.9), None)
+    return {"n_streams": S, "rounds": int(tel.recorder.n_rounds),
+            "jain_trajectory": [round(float(j), 4) for j in jain],
+            "onset_round": onset,
+            "jain_first": round(float(jain[0]), 4),
+            "jain_last": round(float(jain[-1]), 4)}
+
+
+def telemetry_relock_demo(S: int = 8, seed: int = 0) -> dict:
+    """EWMA re-lock lag on the square-wave regime trace: the recorded
+    ``bw_est`` vs ``bw_true`` series make the estimator's recovery time
+    after each 20<->2 Mbps shift a measured number (``relock_lags``)."""
+    from repro.core.netsim import Uplink, mbps
+    from repro.net import EdgeFabric
+    from repro.net.traces import regime_shift_trace
+    from repro.obs import Telemetry, relock_lags
+    from repro.serving import ServeConfig
+    from repro.serving.synthetic import synthetic_streams
+
+    cfg = ServeConfig(resolutions=(4, 8), acc_server=(0.7, 0.99), batch_size=16,
+                      frame_rate=32.0, deadline=0.2)
+    n_frames = 256  # 16 rounds x 0.5 s — two shifts per 4 s period leg
+    imgs, labels = synthetic_streams(S, n_frames, seed=seed)
+    tel = Telemetry(record=True)
+    trace = regime_shift_trace((20.0, 2.0), period=4.0)
+    fab = EdgeFabric.degenerate(
+        Uplink(bandwidth_bps=mbps(20.0), latency=0.05,
+               server_time=cfg.server_time, trace=trace), n_streams=S)
+    _telemetry_server("numpy", S, cfg, fab, tel).process_streams(imgs, labels)
+    rec = tel.recorder
+    lags = relock_lags(rec, rtol=0.25, shift_rtol=0.2)
+    err = rec.bw_error()
+    return {"n_streams": S, "rounds": int(rec.n_rounds),
+            "trace": "regime_shift 20<->2 Mbps, 4 s period",
+            "shifts": [{"round": int(r), "relock_lag_rounds": lag}
+                       for r, lag in lags],
+            "mean_bw_err_per_round": [
+                round(float(np.nanmean(row)), 4) for row in err]}
+
+
+def run_telemetry(args) -> dict:
+    """--telemetry: recorder parity + overhead gates, then the two recorded
+    scenarios (fairness collapse, EWMA re-lock); merges under the
+    ``"telemetry"`` key of BENCH_fleet.json so the throughput rows survive."""
+    import json
+
+    gate = check_telemetry_parity(seed=args.seed)
+    print("bench_fleet_control," +
+          ",".join(f"{k}={v}" for k, v in gate.items()), flush=True)
+    S_over = 256 if args.smoke else 10_000
+    overhead = bench_telemetry_overhead(S_over, n_rounds=4 if args.smoke else 16,
+                                        seed=args.seed)
+    print("bench_fleet_control,telemetry_overhead," +
+          ",".join(f"{k}={v}" for k, v in overhead.items()), flush=True)
+    fairness = telemetry_fairness_demo(seed=args.seed)
+    print(f"bench_fleet_control,fairness_collapse,onset_round="
+          f"{fairness['onset_round']},jain_last={fairness['jain_last']}",
+          flush=True)
+    relock = telemetry_relock_demo(seed=args.seed)
+    print(f"bench_fleet_control,ewma_relock,shifts={relock['shifts']}",
+          flush=True)
+    block = {"parity_gate": gate, "overhead": overhead,
+             "fairness_collapse": fairness, "ewma_relock": relock,
+             "smoke": bool(args.smoke)}
+    from benchmarks.common import emit_bench_json, out_path
+
+    path = out_path("BENCH_fleet.json")
+    payload = {}
+    if os.path.exists(path):
+        with open(path) as fh:
+            payload = json.load(fh)
+    payload["telemetry"] = block
+    emit_bench_json("BENCH_fleet.json", payload)
+    if args.smoke:
+        print("bench_fleet_control,telemetry_smoke=ok  "
+              "(recorder series numpy == jax; overhead within gate)")
+    return block
 
 
 def run_jax(args) -> dict:
@@ -300,6 +479,8 @@ def run_jax(args) -> dict:
 def run(args=None) -> dict:
     if args is None:
         args = parse_args([])
+    if args.telemetry:
+        return run_telemetry(args)
     if args.backend == "jax":
         _force_host_devices(args.devices)
         return run_jax(args)
@@ -345,6 +526,11 @@ def parse_args(argv=None):
     ap.add_argument("--streams", type=lambda s: tuple(int(x) for x in s.split(",")),
                     default=(), help="fleet sizes for the jax round-loop sweep "
                                      "(overrides --sizes; e.g. 1000000)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="telemetry mode: recorder parity + overhead gates "
+                         "plus the recorded fairness-collapse and EWMA "
+                         "re-lock scenarios (merges under the 'telemetry' "
+                         "key of BENCH_fleet.json)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode: small S, single pass, exact parity gates")
     return ap.parse_args(argv)

@@ -174,15 +174,58 @@ def out_path(name: str) -> str:
     return os.path.join(d, name)
 
 
+def provenance() -> dict:
+    """Reproducibility block attached to every bench artifact: where and
+    when the numbers came from.  Every probe is guarded — a missing git
+    checkout or jax install degrades to ``None``, never an exception."""
+    import datetime
+    import subprocess
+
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or None
+    except (OSError, subprocess.SubprocessError):
+        sha = None
+    try:
+        import jax
+
+        jax_version = jax.__version__
+        devices = jax.device_count()
+    except Exception:
+        jax_version, devices = None, None
+    return {
+        "git_sha": sha,
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+        "numpy": np.__version__,
+        "jax": jax_version,
+        "devices": devices,
+    }
+
+
 def emit_bench_json(name: str, payload: dict, *, mirror: str = None) -> str:
     """Single emission point for benchmark artifacts under ``results/bench/``.
 
     Every ``BENCH_*.json`` goes through here so the artifacts share one
     serialization policy (indent=2, trailing newline, numpy scalars coerced
-    to plain floats).  ``mirror`` writes the same payload under a second
-    name — used by benches that keep a legacy filename alongside the
-    canonical ``BENCH_*`` one.  Returns the primary path.
+    to plain floats) and one ``provenance`` block (git sha, UTC timestamp,
+    library versions, device count).  When the process-wide default phase
+    profiler (``repro.obs.profile.DEFAULT``) holds samples, its summary is
+    attached under ``"profile"``.  ``mirror`` writes the same payload under
+    a second name — used by benches that keep a legacy filename alongside
+    the canonical ``BENCH_*`` one.  Returns the primary path.
     """
+    payload = dict(payload)
+    payload.setdefault("provenance", provenance())
+    try:
+        from repro.obs.profile import DEFAULT
+
+        if DEFAULT and "profile" not in payload:
+            payload["profile"] = DEFAULT.summarize()
+    except ImportError:
+        pass
     path = out_path(name)
     for p in (path,) + ((out_path(mirror),) if mirror else ()):
         with open(p, "w") as f:

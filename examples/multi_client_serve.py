@@ -17,6 +17,12 @@ LTE/WiFi bandwidth trace), escalations sharded across K slow-tier replica
 queues.  The defaults (1 cell, 1 replica, no trace) reproduce the legacy
 single-uplink pipeline exactly.
 
+``--trace-out trace.json`` turns on the frame-lifecycle tracer
+(``repro.obs``) and exports every offloaded frame's span tree — device
+pass, offload window, cell queue, upload, replica queue, batched service
+— as Chrome trace-event JSON; load it in ui.perfetto.dev or
+chrome://tracing.
+
   PYTHONPATH=src:benchmarks python examples/multi_client_serve.py --streams 8 --bw 5
   PYTHONPATH=src python examples/multi_client_serve.py --streams 8 --synthetic --churn
   PYTHONPATH=src python examples/multi_client_serve.py --streams 16 --synthetic \\
@@ -55,6 +61,11 @@ def main():
     ap.add_argument("--trace", choices=("none", "lte", "wifi", "regime"),
                     default="none", help="per-cell synthetic bandwidth trace "
                                          "(scaled to --bw as the mean rate)")
+    ap.add_argument("--trace-out", metavar="PATH", default=None,
+                    help="record every offloaded frame's lifecycle "
+                         "(queued/uploaded/placed/batched/served) and export "
+                         "a Chrome trace-event JSON — open in ui.perfetto.dev "
+                         "or chrome://tracing")
     args = ap.parse_args()
 
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -109,11 +120,16 @@ def main():
             serial_replicas=args.replicas > 1)
     names = args.policy.split(",")
     policy = names[0] if len(names) == 1 else (lambda s: names[s % len(names)])
+    telemetry = None
+    if args.trace_out:
+        from repro.obs import Telemetry
+
+        telemetry = Telemetry(record=True, trace=True)
     server = MultiStreamServer(cfg, fast, slow, calibrate,
                                uplink if fabric is None else None,
                                n_streams=args.streams,
                                scheduler=FairScheduler(args.scheduler), policy=policy,
-                               fabric=fabric)
+                               fabric=fabric, telemetry=telemetry)
     schedule = None
     if args.churn:
         from benchmarks.bench_multistream import churn_schedule
@@ -132,6 +148,13 @@ def main():
     for s, m in enumerate(metrics.per_stream):
         print(f"    stream {s:3d}: acc={m.accuracy:.3f} offload={m.offload_frac:.3f} "
               f"miss={m.deadline_miss_frac:.3f}")
+    if telemetry is not None:
+        path = telemetry.tracer.export_chrome_trace(args.trace_out)
+        att = telemetry.tracer.miss_attribution()
+        print(f"\n  frame-lifecycle trace: {telemetry.tracer.n_frames} offloads "
+              f"-> {path}")
+        print(f"  miss attribution: {att['misses']} misses "
+              f"({att['radio']} radio-dominant, {att['slow_tier']} slow-tier)")
 
 
 if __name__ == "__main__":

@@ -89,6 +89,9 @@ class Uplink:
     n_transfers: int = 0
     busy_seconds: float = 0.0  # total wire time
     queued_seconds: float = 0.0  # total head-of-line blocking across transfers
+    # per-row start times of the most recent upload_batch (telemetry: the
+    # queued-at-cell -> on-the-wire transition per transfer)
+    last_starts: Optional[np.ndarray] = field(default=None, repr=False)
 
     def __post_init__(self):
         if self.jitter_mode not in ("pcg", "counter"):
@@ -192,6 +195,7 @@ class Uplink:
         payloads = np.asarray(payload_bytes, dtype=np.float64)
         subs = np.asarray(t_submit, dtype=np.float64)
         if payloads.size == 0:
+            self.last_starts = np.zeros(0, dtype=np.float64)
             return np.zeros(0, dtype=np.float64)
         if not self._varying:
             tx = payloads / self.bandwidth_bps
@@ -215,6 +219,7 @@ class Uplink:
                     end_tx[i] = busy
                 tx = end_tx - np.maximum(subs, np.r_[self._busy_until, end_tx[:-1]])
         starts = end_tx - tx
+        self.last_starts = starts
         self._busy_until = float(end_tx[-1])
         self.n_transfers += payloads.size
         self.busy_seconds += float(tx.sum())

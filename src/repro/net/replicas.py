@@ -55,6 +55,11 @@ class ReplicaPool:
         # per-request service time of the most recent ``process`` batch (for
         # batched service this is the member's whole-batch f(n))
         self.last_service = np.zeros(0, dtype=np.float64)
+        # per-request batch id of the most recent ``process`` batch:
+        # pool-unique, monotone ids for batched service, -1 for unbatched
+        # requests (telemetry: which escalations shared one f(n) launch)
+        self.last_batch_id = np.zeros(0, dtype=np.int64)
+        self._bid_seq = 0  # next global batch id
         self.busy_until = np.zeros(self.n_replicas, dtype=np.float64)
         # contention accounting, per replica
         self.n_jobs = np.zeros(self.n_replicas, dtype=np.int64)
@@ -110,9 +115,11 @@ class ReplicaPool:
             raise ValueError("t_arrive and replica must have matching shapes")
         if len(t_arrive) == 0:
             self.last_service = np.zeros(0, dtype=np.float64)
+            self.last_batch_id = np.zeros(0, dtype=np.int64)
             return np.zeros(0, dtype=np.float64)
         if (replica < 0).any() or (replica >= self.n_replicas).any():
             raise ValueError("replica id out of range")
+        self.last_batch_id = np.full(len(t_arrive), -1, dtype=np.int64)
         st = self.server_time[replica]
         if service_scale is not None:
             scale = np.broadcast_to(
@@ -177,6 +184,8 @@ class ReplicaPool:
             done[order[a:b]] = d
             service[order[a:b]] = f
             bsize[order[a:b]] = nb
+            self.last_batch_id[order[a:b]] = self._bid_seq + bid
+            self._bid_seq += int(bid[-1]) + 1
             self.busy_until[k] = d[-1]  # last batch's completion
             first = np.r_[True, bid[1:] != bid[:-1]]  # one row per batch
             self.busy_seconds[k] += float(f[first].sum())
@@ -201,3 +210,5 @@ class ReplicaPool:
         self.queued_seconds[:] = 0.0
         self.avg_batch = 1.0
         self.last_service = np.zeros(0, dtype=np.float64)
+        self.last_batch_id = np.zeros(0, dtype=np.int64)
+        self._bid_seq = 0

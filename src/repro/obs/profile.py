@@ -1,0 +1,85 @@
+"""Profiling hooks: phase timers for the engines and benches.
+
+Two timing regimes, one reporting surface:
+
+  * ``PhaseProfiler`` — wall-clock accumulators for the numpy engine's
+    per-round phases (plan / serve / transmit / fold) and the jax
+    bridge's host phases (precompute / scan / fold).  Zero-cost when
+    off: the engines hold ``prof = None`` and never touch a clock.
+  * ``aot_split`` — the compile-vs-steady split for jitted entry points
+    (``fn.lower(*args).compile()`` timed as one explicit step), so
+    ``compile_s`` is a measured wall-clock, never a first-call
+    subtraction.  ``bench_fleet_control.py`` reports both numbers
+    through it.
+
+``summarize()`` is the shared reporting format; ``emit_bench_json``
+attaches the module-level ``DEFAULT`` profiler's summary to every
+``BENCH_*.json`` payload whenever it holds any samples.
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+__all__ = ["PhaseProfiler", "aot_split", "DEFAULT"]
+
+
+class PhaseProfiler:
+    """Named wall-clock accumulators (total seconds + call counts)."""
+
+    def __init__(self):
+        self.totals: dict[str, float] = {}
+        self.counts: dict[str, int] = {}
+
+    def add(self, name: str, seconds: float) -> None:
+        self.totals[name] = self.totals.get(name, 0.0) + float(seconds)
+        self.counts[name] = self.counts.get(name, 0) + 1
+
+    @contextmanager
+    def phase(self, name: str):
+        """``with prof.phase("plan"): ...`` — one timed region."""
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.add(name, time.perf_counter() - t0)
+
+    def __bool__(self) -> bool:  # "does it hold samples" (DEFAULT gating)
+        return bool(self.totals)
+
+    def summarize(self) -> dict:
+        """Per-phase ``{total_s, calls, mean_ms}`` plus the grand total —
+        the block ``emit_bench_json`` embeds under ``"profile"``."""
+        out = {}
+        for name in self.totals:
+            t, c = self.totals[name], self.counts[name]
+            out[name] = {"total_s": round(t, 6), "calls": c,
+                         "mean_ms": round(t / max(c, 1) * 1e3, 4)}
+        if out:
+            out["total_s"] = round(sum(self.totals.values()), 6)
+        return out
+
+    def reset(self) -> None:
+        self.totals.clear()
+        self.counts.clear()
+
+
+def aot_split(fn, *args, profiler: PhaseProfiler | None = None):
+    """AOT-compile a jitted callable and time the lower+compile step.
+
+    Returns ``(compiled, compile_s)``.  The caller times steady-state
+    executions of ``compiled`` itself (donated buffers make that
+    caller-specific); when ``profiler`` is given the compile time is also
+    folded in under ``"compile"``.
+    """
+    t0 = time.perf_counter()
+    compiled = fn.lower(*args).compile()
+    dt = time.perf_counter() - t0
+    if profiler is not None:
+        profiler.add("compile", dt)
+    return compiled, dt
+
+
+# benches fold into this one by default so emit_bench_json can attach a
+# profile block without threading a profiler through every bench signature
+DEFAULT = PhaseProfiler()

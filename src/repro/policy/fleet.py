@@ -301,6 +301,9 @@ class FleetRunner:
         self.actions = actions if actions.has_splits else None
         self.sizes = actions.sizes[:actions.n_frame_actions]
         self.bw_alpha = float(bw_alpha)
+        # telemetry hook (repro.obs.PhaseProfiler): when set, plan_all
+        # folds its wall-clock into the "plan" phase; None costs nothing
+        self.profiler = None
         # under an edge fabric, ``bw_init`` is the (S,) per-cell prior and
         # each stream's EWMA tracks its own cell's uplink from then on
         self.bw_est = np.broadcast_to(np.asarray(bw_init, dtype=np.float64), (S,)).copy()
@@ -359,6 +362,12 @@ class FleetRunner:
 
     def plan_all(self, now: np.ndarray, active: np.ndarray | None = None) -> PlanBatch:
         """One planning pass over every active stream's backlog."""
+        if self.profiler is None:
+            return self._plan_all(now, active)
+        with self.profiler.phase("plan"):
+            return self._plan_all(now, active)
+
+    def _plan_all(self, now: np.ndarray, active: np.ndarray | None = None) -> PlanBatch:
         S = self.n_streams
         now = np.asarray(now, dtype=np.float64)
         active = np.ones(S, dtype=bool) if active is None else np.asarray(active, dtype=bool)

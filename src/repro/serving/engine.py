@@ -43,6 +43,7 @@ checks this).
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import Callable, Optional
 
@@ -190,7 +191,7 @@ class MultiStreamServer:
                  calibrate: Callable, uplink: Optional[Uplink], n_streams: int,
                  scheduler: Optional[FairScheduler] = None, stagger: bool = True,
                  policy="cbo", fabric: Optional[EdgeFabric] = None,
-                 backend: str = "numpy"):
+                 backend: str = "numpy", telemetry=None):
         if n_streams < 1:
             raise ValueError("n_streams must be >= 1")
         if backend not in ("numpy", "jax"):
@@ -250,6 +251,16 @@ class MultiStreamServer:
         )
         self.metrics = AggregateMetrics.for_streams(n_streams, uplink=self.uplink,
                                                     fabric=fabric)
+        # optional observability bundle (``repro.obs.Telemetry``): a per-round
+        # time-series recorder, a frame-lifecycle tracer (numpy only) and a
+        # phase profiler.  ``None`` (the default) is the zero-cost path —
+        # every hook below is a ``x is not None`` check that fails fast.
+        self.telemetry = telemetry
+        if telemetry is not None:
+            telemetry.bind(n_streams=n_streams, n_cells=fabric.n_cells,
+                           n_replicas=fabric.n_replicas,
+                           n_actions=self.fleet.action_table.n_actions)
+            self.fleet.profiler = telemetry.profiler
         if backend == "jax":
             # fail fast on configurations the compiled path cannot express,
             # naming every unsupported feature (shared supports_jax check)
@@ -284,6 +295,13 @@ class MultiStreamServer:
         if self.backend == "jax":
             return self._process_streams_jax(frames, labels, schedule)
 
+        # telemetry hooks: every guard below is a plain ``is not None`` so
+        # the default (no telemetry) path touches no clock and no buffer
+        tel = self.telemetry
+        rec = tel.recorder if tel is not None else None
+        tracer = tel.tracer if tel is not None else None
+        prof = tel.profiler if tel is not None else None
+
         for start, arr, valid in schedule.rounds(B):
             b = arr.shape[1]
             active = valid.any(axis=1)  # (S,) streams with frames this round
@@ -291,10 +309,13 @@ class MultiStreamServer:
             # yet joined — the latter have nothing to clear)
             self.fleet.retire(~active)
 
+            t0 = time.perf_counter() if prof is not None else 0.0
             flat = jnp.asarray(frames[:, start : start + b].reshape(S * b, *frames.shape[2:]))
             fp, cf = _fast_pass(cfg, self.fast_forward, self.calibrate, flat)
             fast_preds = np.asarray(fp).reshape(S, b)
             conf = np.asarray(cf).reshape(S, b)
+            if prof is not None:
+                prof.add("serve", time.perf_counter() - t0)
             t_ready = arr + t_fast  # (S, b); +inf on invalid slots
 
             # control plane: one batched plan over every active backlog,
@@ -336,15 +357,19 @@ class MultiStreamServer:
             )
 
             # one batched slow-tier call for every stream's escalations
+            t0 = time.perf_counter() if prof is not None else 0.0
             if len(esc):
                 gathered = jnp.take(flat, jnp.asarray(s_idx * b + slot_idx), axis=0)
                 slow_preds = np.asarray(slow_pass_multires(self.slow_forward, gathered, esc.res))
             else:
                 slow_preds = np.zeros(0, dtype=fast_preds.dtype)
+            if prof is not None:
+                prof.add("serve", time.perf_counter() - t0)
 
             # fair uplink schedule (cost normalized by each stream's own
             # cell rate), then one fabric transmit for the round: per-cell
             # uplink queues + replica placement + pool service
+            t0 = time.perf_counter() if prof is not None else 0.0
             order = self.scheduler.order(esc.stream, esc.t_ready,
                                          cost=esc.payload / self._stream_bw[esc.stream])
             q = esc.permuted(order)
@@ -352,9 +377,23 @@ class MultiStreamServer:
             # split suffixes cost a fraction of the full-model service time
             # (frames scale by exactly 1.0 — a float no-op)
             lands = self.fabric.transmit(q.stream, q.payload, q.t_ready,
-                                         service_scale=act.srv_frac[res_idx[q.stream]])
+                                         service_scale=act.srv_frac[res_idx[q.stream]],
+                                         collect_detail=tracer is not None)
+            if prof is not None:
+                prof.add("transmit", time.perf_counter() - t0)
             ok = lands <= arr[q.stream, q.slot] + cfg.deadline
 
+            if tracer is not None and len(q):
+                d = self.fabric.last_detail
+                tracer.record_round(
+                    stream=q.stream, slot=q.slot,
+                    arrival=arr[q.stream, q.slot], t_ready=q.t_ready,
+                    cell=d["cell"], up_start=d["up_start"], up_end=d["up_end"],
+                    replica=d["replica"], service=d["service"],
+                    batch_id=d["batch_id"], done=d["done"],
+                    land=lands, ok=ok, deadline=cfg.deadline)
+
+            t0 = time.perf_counter() if prof is not None else 0.0
             final = fast_preds.copy()
             final[q.stream[ok], q.slot[ok]] = slow_q[ok]
 
@@ -390,6 +429,31 @@ class MultiStreamServer:
                        if labels is not None else np.zeros(S, dtype=np.int64))
             self.metrics.update_round(valid.sum(axis=1), off_counts, miss_counts,
                                       correct, lat, valid)
+            if prof is not None:
+                prof.add("fold", time.perf_counter() - t0)
+
+            if rec is not None:
+                # cumulative counters (the metrics SoA is exactly the jax
+                # carry's semantics), planner state as used THIS round, and
+                # the contention cursors post-round
+                t_round = float(fin.min()) if len(fin) else np.nan
+                hist = np.zeros(rec.n_actions, dtype=np.int64)
+                np.add.at(hist, res_idx, np.where(active, batch.n_offloads, 0))
+                m, fab = self.metrics, self.fabric
+                rec.record_round(
+                    t=t_round,
+                    frames=m._frames, offloads=m._offloaded,
+                    misses=m._missed, correct=m._correct,
+                    bw_est=self.fleet.bw_est,
+                    bw_true=fab.true_bandwidth(t_round),
+                    cell_busy_s=[c.uplink.busy_seconds for c in fab.cells],
+                    cell_queued_s=[c.uplink.queued_seconds for c in fab.cells],
+                    rep_busy_s=pool.busy_seconds,
+                    rep_queued_s=pool.queued_seconds,
+                    avg_batch=pool.avg_batch,
+                    server_time=self.fleet.server_time,
+                    action_off=hist,
+                )
 
             if self.round_hook is not None:
                 ok_grid = np.zeros((S, b), dtype=bool)
@@ -426,18 +490,23 @@ class MultiStreamServer:
         resolutions = np.asarray(cfg.resolutions)
         m = len(resolutions)
         collect = "trace" if self.round_hook is not None else "metrics"
+        tel = self.telemetry
+        rec = tel.recorder if tel is not None else None
+        prof = tel.profiler if tel is not None else None
         # under a mesh, pad the stream axis to the device multiple so the
         # "streams" logical axis actually splits; the pad rows never see a
         # valid frame, so every output below is sliced back to [:S]
         mult = logical_axis_multiple("streams")
         S_pad = -(-S // mult) * mult
         spad = S_pad - S
-        spec = ej.spec_from_server(self, collect=collect, pad_streams=S_pad)
+        spec = ej.spec_from_server(self, collect=collect, pad_streams=S_pad,
+                                   telemetry=rec is not None)
         params = ej.params_from_server(self, spec)
 
         # host precompute: confidences + per-resolution slow-tier
         # correctness for every (frame, res) — both tiers are deterministic
         # per frame, so this equals the numpy path's escalated-only batching
+        t0 = time.perf_counter() if prof is not None else 0.0
         rounds = []
         per_round = []
         for start, arr, valid in schedule.rounds(B):
@@ -471,14 +540,22 @@ class MultiStreamServer:
                 slow_ok = np.pad(slow_ok, ((0, spad), (0, 0), (0, 0)))
             rounds.append((arr, valid, conf, fast_ok, slow_ok))
             per_round.append((start, b))
+        if prof is not None:
+            prof.add("precompute", time.perf_counter() - t0)
         if not rounds:
             return self.metrics
         # place the stacked (R, S, B[, m]) inputs pre-split over the mesh
         # (no-op off-mesh) so the scan reads local shards from round one
+        t0 = time.perf_counter() if prof is not None else 0.0
         inputs = ej.RoundInputs(*(
             host_shard(jnp.asarray(col), *((None, "streams", None, None)[:col.ndim]))
             for col in (np.stack(c) for c in zip(*rounds))))
         carry, ys = ej.simulate(spec, params, inputs)
+        if prof is not None:
+            import jax
+
+            jax.block_until_ready(carry)
+            prof.add("scan", time.perf_counter() - t0)
         if carry.fp_bad is not None and bool(carry.fp_bad):
             import warnings
 
@@ -489,6 +566,16 @@ class MultiStreamServer:
 
         # fold per-round counters/latencies into the same AggregateMetrics
         # (everything stream-indexed is sliced back to the real S rows)
+        t0 = time.perf_counter() if prof is not None else 0.0
+        # host baselines of the cumulative second counters — the carry
+        # accumulates deltas from zero, the recorder (and numpy) report
+        # absolute values, so the pre-scan state is added back per round
+        base_cb = np.asarray([c.uplink.busy_seconds for c in self.fabric.cells])
+        base_cq = np.asarray([c.uplink.queued_seconds for c in self.fabric.cells])
+        base_rb = self.fabric.pool.busy_seconds.copy()
+        base_rq = self.fabric.pool.queued_seconds.copy()
+        base_ctr = (self.metrics._frames.copy(), self.metrics._offloaded.copy(),
+                    self.metrics._missed.copy(), self.metrics._correct.copy())
         off = np.asarray(ys.off_counts)[:, :S]
         miss = np.asarray(ys.miss_counts)[:, :S]
         corr = np.asarray(ys.correct)[:, :S]
@@ -525,6 +612,41 @@ class MultiStreamServer:
         st.conf = conf_f.astype(np.float64)
         st.stream_id = np.repeat(np.arange(S), lens)
         st._rebuild_offsets()
+        if prof is not None:
+            prof.add("fold", time.perf_counter() - t0)
+
+        if rec is not None:
+            # replay the scan's stacked telemetry columns into the recorder.
+            # Cumulative counters come from host cumsums of the per-round
+            # integer columns (bit-exact — same int arithmetic as numpy's
+            # running SoA); t and bw_true are recomputed host-side from the
+            # same float64 arrival grid, so they are bit-equal by
+            # construction; the rest compares at the tolerance policy.
+            frames_c = base_ctr[0] + np.cumsum(
+                [r[1][:S].sum(axis=1) for r in rounds], axis=0)
+            off_c = base_ctr[1] + np.cumsum(off, axis=0, dtype=np.int64)
+            miss_c = base_ctr[2] + np.cumsum(miss, axis=0, dtype=np.int64)
+            corr_c = base_ctr[3] + np.cumsum(corr, axis=0, dtype=np.int64)
+            bw_ts = np.asarray(ys.ts_bw_est, dtype=np.float64)[:, :S]
+            hist_ts = np.asarray(ys.ts_off_hist, dtype=np.int64)
+            cb = base_cb + np.asarray(ys.ts_cell_busy_s, dtype=np.float64)
+            cq = base_cq + np.asarray(ys.ts_cell_queued_s, dtype=np.float64)
+            rb = base_rb + np.asarray(ys.ts_rep_busy_s, dtype=np.float64)
+            rq = base_rq + np.asarray(ys.ts_rep_queued_s, dtype=np.float64)
+            ab = np.asarray(ys.ts_avg_batch, dtype=np.float64)
+            st_ts = np.asarray(ys.ts_st_est, dtype=np.float64)
+            for i in range(len(per_round)):
+                arr_i = rounds[i][0][:S]
+                fin = arr_i[np.isfinite(arr_i)]
+                t_round = float(fin.min()) if len(fin) else np.nan
+                rec.record_round(
+                    t=t_round, frames=frames_c[i], offloads=off_c[i],
+                    misses=miss_c[i], correct=corr_c[i], bw_est=bw_ts[i],
+                    bw_true=self.fabric.true_bandwidth(t_round),
+                    cell_busy_s=cb[i], cell_queued_s=cq[i],
+                    rep_busy_s=rb[i], rep_queued_s=rq[i],
+                    avg_batch=ab[i], server_time=st_ts[i],
+                    action_off=hist_ts[i])
 
         if self.round_hook is not None:
             act = self.fleet.action_table

@@ -118,6 +118,11 @@ class EngineSpec:
     act_t_dev: tuple = ()  # (A,) device prefix seconds per action
     act_srv_frac: tuple = ()  # (A,) fraction of replica service per action
     act_res: tuple = ()  # (A,) evaluation resolution index per action
+    # telemetry: emit the FleetRecorder's per-round series as extra stacked
+    # ``ys`` (obs/timeseries.py).  False keeps the RoundTrace pytree — and
+    # therefore the compiled graph the snapshot goldens pin — unchanged
+    # (the ts_* fields stay None and vanish as pytree leaves).
+    telemetry: bool = False
 
     @property
     def has_splits(self) -> bool:
@@ -208,6 +213,15 @@ class RoundTrace(NamedTuple):
     lengths: jnp.ndarray  # (S,) backlog lengths after extend
     overflow: jnp.ndarray  # (S,) bool
     inexact: jnp.ndarray  # (S,) bool
+    # -- spec.telemetry extras (None leaves vanish from the pytree) ------- #
+    ts_bw_est: Optional[jnp.ndarray] = None  # (S,) post-fold EWMA
+    ts_off_hist: Optional[jnp.ndarray] = None  # (A,) int32 planned offloads
+    ts_cell_busy_s: Optional[jnp.ndarray] = None  # (C,) carry-relative
+    ts_cell_queued_s: Optional[jnp.ndarray] = None  # (C,)
+    ts_rep_busy_s: Optional[jnp.ndarray] = None  # (K,)
+    ts_rep_queued_s: Optional[jnp.ndarray] = None  # (K,)
+    ts_avg_batch: Optional[jnp.ndarray] = None  # () post-round EWMA
+    ts_st_est: Optional[jnp.ndarray] = None  # () planner's T^o this round
 
 
 def init_carry(spec: EngineSpec, params: EngineParams) -> EngineCarry:
@@ -710,6 +724,9 @@ def _round_step(spec: EngineSpec, params: EngineParams,
         avg_batch=avg_batch, jit_key=carry.jit_key, fp_bad=fp_bad)
 
     if spec.collect == "none":
+        if spec.telemetry:
+            raise ValueError("spec.telemetry needs collect >= 'metrics' — "
+                             "the recorder's series ride on the ys pytree")
         return out, None
     z0 = jnp.zeros((0,))
     extras = dict(theta=z0, res_idx=z0, cap=z0, n_off=z0, n_frames=z0,
@@ -720,6 +737,23 @@ def _round_step(spec: EngineSpec, params: EngineParams,
                       n_frames=plan.n_frames, dec=dec, esc=esc, ok=ok_grid,
                       bw_est=bw_est, lengths=fleet.length,
                       overflow=plan.overflow, inexact=plan.inexact)
+    if spec.telemetry:
+        # the FleetRecorder's per-round record (obs/timeseries.py): the
+        # cumulative per-stream counters come from host cumsums of the
+        # off/miss/correct columns above (integer-exact), so only the
+        # simulated-state series are emitted here.  The histogram over the
+        # action table is exact: every planned offload of stream s carries
+        # action res_idx[s], and inactive/pad rows plan n_off == 0.
+        A = params.sizes.shape[0]
+        extras.update(
+            ts_bw_est=bw_est,
+            ts_off_hist=jnp.zeros((A,), jnp.int32).at[res_idx].add(
+                n_off.astype(jnp.int32)),
+            ts_cell_busy_s=cell_busy_s, ts_cell_queued_s=cell_queued_s,
+            ts_rep_busy_s=rep_busy_s, ts_rep_queued_s=rep_queued_s,
+            ts_avg_batch=avg_batch,
+            ts_st_est=(st_eff if st_eff is not None
+                       else jnp.asarray(spec.planner.server_time, dtype=dt)))
     ys = RoundTrace(off_counts=off_counts, miss_counts=miss_counts,
                     correct=correct_r, lat=lat, **extras)
     return out, ys
@@ -786,6 +820,12 @@ def jax_unsupported(server) -> list:
                 "split actions with a live continuous-batching slow tier: "
                 "batches share one f(n) latency curve, so per-request "
                 "srv_frac scaling is not expressible (numpy raises too)")
+    tel = getattr(server, "telemetry", None)
+    if tel is not None and (tel.tracer is not None or getattr(tel, "trace", False)):
+        reasons.append(
+            "frame-lifecycle tracing (Telemetry.trace) needs per-frame host "
+            "visibility the compiled scan does not have — use the numpy "
+            "backend for traces (the per-round recorder works on both)")
     return reasons
 
 
@@ -797,7 +837,8 @@ def supports_jax(server) -> bool:
 
 
 def spec_from_server(server, collect: str = "metrics",
-                     pad_streams: Optional[int] = None) -> EngineSpec:
+                     pad_streams: Optional[int] = None,
+                     telemetry: bool = False) -> EngineSpec:
     """Build the static spec from a ``MultiStreamServer`` (validating that
     the configuration is expressible in fixed shapes).  ``pad_streams``
     widens the stream axis to a device multiple for mesh sharding — the
@@ -809,6 +850,8 @@ def spec_from_server(server, collect: str = "metrics",
     if reasons:
         raise ValueError("backend='jax' cannot express this configuration: "
                          + "; ".join(reasons))
+    if telemetry and collect == "none":
+        collect = "metrics"  # the recorder's series ride on the ys pytree
     fleet = server.fleet
     S = server.n_streams if pad_streams is None else int(pad_streams)
     if S < server.n_streams:
@@ -874,7 +917,8 @@ def spec_from_server(server, collect: str = "metrics",
                         for u in uplinks) if varying else (),
         act_t_dev=tuple(float(x) for x in at.t_dev) if has_splits else (),
         act_srv_frac=tuple(float(x) for x in at.srv_frac) if has_splits else (),
-        act_res=tuple(int(r) for r in at.res) if has_splits else ())
+        act_res=tuple(int(r) for r in at.res) if has_splits else (),
+        telemetry=bool(telemetry))
 
 
 def params_from_server(server, spec: EngineSpec) -> EngineParams:

@@ -52,14 +52,18 @@ class ServeMetrics:
         self.latencies.extend(float(x) for x in np.atleast_1d(latencies))
 
     def summary(self) -> dict:
-        lat = np.asarray(self.latencies) if self.latencies else np.zeros(1)
+        # no latencies observed → the percentiles do not exist; reporting
+        # them as null keeps "no data" distinguishable from "0 ms"
+        lat = np.asarray(self.latencies, dtype=np.float64)
         return {
             "frames": self.n_frames,
             "accuracy": round(self.accuracy, 4),
             "offload_frac": round(self.offload_frac, 4),
             "deadline_miss_frac": round(self.deadline_miss_frac, 4),
-            "p50_latency_ms": round(float(np.percentile(lat, 50)) * 1e3, 2),
-            "p99_latency_ms": round(float(np.percentile(lat, 99)) * 1e3, 2),
+            "p50_latency_ms": (round(float(np.percentile(lat, 50)) * 1e3, 2)
+                               if lat.size else None),
+            "p99_latency_ms": (round(float(np.percentile(lat, 99)) * 1e3, 2)
+                               if lat.size else None),
         }
 
 
@@ -156,8 +160,6 @@ class AggregateMetrics:
     def summary(self) -> dict:
         lats = (np.concatenate([lat[ok] for lat, ok in self._lat_chunks])
                 if self._lat_chunks else np.zeros(0))
-        if lats.size == 0:
-            lats = np.zeros(1)
         # straight from the SoA counters — no per-stream materialization
         acc = self._correct / np.maximum(self._frames, 1)
         out = {
@@ -166,8 +168,10 @@ class AggregateMetrics:
             "accuracy": round(self.accuracy, 4),
             "offload_frac": round(self.offload_frac, 4),
             "deadline_miss_frac": round(self.deadline_miss_frac, 4),
-            "p50_latency_ms": round(float(np.percentile(lats, 50)) * 1e3, 2),
-            "p99_latency_ms": round(float(np.percentile(lats, 99)) * 1e3, 2),
+            "p50_latency_ms": (round(float(np.percentile(lats, 50)) * 1e3, 2)
+                               if lats.size else None),
+            "p99_latency_ms": (round(float(np.percentile(lats, 99)) * 1e3, 2)
+                               if lats.size else None),
             "stream_acc_min": round(float(min(acc)), 4),
             "stream_acc_max": round(float(max(acc)), 4),
             "offload_fairness": round(self.offload_fairness, 4),

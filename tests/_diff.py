@@ -108,7 +108,7 @@ def canonical_actions():
 def make_server(backend: str, *, S: int, policy="cbo", scheduler="round_robin",
                 topology="degenerate", placement="jsq", frame_rate=32.0,
                 bw_mbps=50.0, seed=0, jitter=0.0, jitter_mode="counter",
-                traces=None, actions=None):
+                traces=None, actions=None, telemetry=None):
     """One ``MultiStreamServer`` on the canonical differential config.
 
     ``frame_rate=32`` keeps the arrival grid exactly representable in
@@ -146,7 +146,8 @@ def make_server(backend: str, *, S: int, policy="cbo", scheduler="round_robin",
         fab = EdgeFabric(ups, pool, n_streams=S, placement=placement)
     return MultiStreamServer(cfg, fast, slow, cal, None, n_streams=S,
                              scheduler=FairScheduler(scheduler), fabric=fab,
-                             policy=policy, backend=backend), cfg
+                             policy=policy, backend=backend,
+                             telemetry=telemetry), cfg
 
 
 def run_differential(*, S: int, policy="cbo", scheduler="round_robin",

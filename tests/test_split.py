@@ -280,10 +280,10 @@ def test_engine_transmits_table_bytes_and_service_scale():
     calls = []
     orig = srv.fabric.transmit
 
-    def spy(stream, payload, t_submit, *, service_scale=None):
+    def spy(stream, payload, t_submit, *, service_scale=None, **kw):
         calls.append((np.atleast_1d(np.asarray(payload, dtype=np.float64)).copy(),
                       np.atleast_1d(np.asarray(service_scale, dtype=np.float64)).copy()))
-        return orig(stream, payload, t_submit, service_scale=service_scale)
+        return orig(stream, payload, t_submit, service_scale=service_scale, **kw)
 
     srv.fabric.transmit = spy
     imgs, labels = synthetic_streams(3, 48, seed=0)
